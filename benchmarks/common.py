@@ -1,0 +1,99 @@
+"""Shared benchmark harness: trained draft/target pair (cached to disk),
+engine sweep helpers, CSV emission.
+
+The pair mirrors the paper's GPT-Neo-125M → GPT-Neo-1.3B setup at a scale
+this CPU container can train: same-family models with a 2x capacity gap,
+trained on the synthetic Zipf–Markov corpus until a real SLM↔LLM mismatch
+gradient exists (DESIGN.md §8)."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig, summarize
+from repro.core.channel import ChannelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.train import checkpoint
+from repro.train.optimizer import AdamWConfig, init_state
+from repro.train.trainer import make_train_step
+
+CACHE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "cache")
+
+BENCH_STEPS = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", "500"))
+BENCH_ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "12"))
+# constrained edge uplink (paper §1 motivation): bits must matter
+BENCH_UPLINK_BPS = float(os.environ.get("REPRO_BENCH_UPLINK", "2e5"))
+
+
+def _train(cfg, steps, seed, data):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=steps)))
+    st = init_state(params)
+    for b in data.batches(steps):
+        params, st, m = step(params, st,
+                             {"tokens": jnp.asarray(b["tokens"])})
+    return params, float(m["ce"])
+
+
+def trained_pair(arch: str = "gptneo-1.3b", steps: int = BENCH_STEPS):
+    """Returns (draft_cfg, draft_params, target_cfg, target_params, data).
+    Cached on disk keyed by (arch, steps)."""
+    tc = configs.smoke_variant(configs.get_config(arch))
+    dc = configs.draft_variant(tc, 2)
+    # strongly structured corpus → trained pairs reach the high per-token
+    # acceptance regime where the paper's K/β dynamics are visible
+    data = SyntheticLM(DataConfig(vocab=tc.vocab, seq_len=48, batch=16,
+                                  p_bigram=0.85, jitter=2, seed=5))
+    os.makedirs(CACHE, exist_ok=True)
+    tpath = os.path.join(CACHE, f"{arch}-target-{steps}.npz")
+    dpath = os.path.join(CACHE, f"{arch}-draft-{steps}.npz")
+    if os.path.exists(tpath) and os.path.exists(dpath):
+        tp = checkpoint.load(tpath, like=init_params(tc,
+                                                     jax.random.PRNGKey(1)))
+        dp = checkpoint.load(dpath, like=init_params(dc,
+                                                     jax.random.PRNGKey(2)))
+        return dc, dp, tc, tp, data
+    tp, tce = _train(tc, steps, 1, data)
+    dp, dce = _train(dc, max(steps // 2, 30), 2, data)
+    checkpoint.save(tpath, tp, meta={"ce": tce})
+    checkpoint.save(dpath, dp, meta={"ce": dce})
+    return dc, dp, tc, tp, data
+
+
+def run_engine(dc, dp, tc, tp, data, *, method: MethodConfig,
+               temperature: float, L_max: int = 6,
+               bit_budget: float = 5000.0, rounds: int = BENCH_ROUNDS,
+               batch: int = 2, warmup: int = 2, seed: int = 0,
+               collect_theory: bool = False,
+               channel: ChannelConfig = None):
+    if channel is None:
+        channel = ChannelConfig(uplink_bps=BENCH_UPLINK_BPS)
+    """Runs the engine; drops `warmup` rounds (jit compile) from latency."""
+    eng = EdgeCloudEngine(
+        dc, dp, tc, tp, method,
+        EngineConfig(L_max=L_max, bit_budget=bit_budget,
+                     temperature=temperature,
+                     collect_theory=collect_theory),
+        channel, seed=seed)
+    prompts = data.sample(batch, 9)[:, :-1]
+    all_rounds, _ = eng.run(prompts, rounds + warmup)
+    return all_rounds[warmup:], summarize(all_rounds[warmup:])
+
+
+def emit_csv(name: str, rows: list, keys: list, out_dir="experiments/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(f"{r[k]:.6g}" if isinstance(r[k], float)
+                             else str(r[k]) for k in keys) + "\n")
+    return path

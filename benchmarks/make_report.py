@@ -1,0 +1,151 @@
+"""Assemble EXPERIMENTS.md sections from the dry-run JSONs and bench CSVs.
+
+    PYTHONPATH=src python -m benchmarks.make_report > EXPERIMENTS.generated.md
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+
+from benchmarks import roofline
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_dir(d):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(ROOT, d, "*.json"))):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_section():
+    base = _load_dir("experiments/dryrun")
+    opt = _load_dir("experiments/dryrun_opt")
+    out = ["## §Dry-run — every (arch × shape × mesh) lowers and compiles",
+           "",
+           "`B` = baseline sharding, `O` = optimized (§Perf flags: "
+           "seq-shard KV fallback, seq-parallel residuals, shard_map MoE). "
+           "peak = per-chip bytes (arg+out+temp−alias) from "
+           "`compiled.memory_analysis()`; coll = per-device collective "
+           "bytes parsed from post-SPMD HLO (layer-scan bodies × trip "
+           "count).", "",
+           "| arch | shape | mesh | status | peak GiB (B→O) | coll GiB "
+           "(B→O) | compile s |", "|---|---|---|---|---|---|---|"]
+    for key in sorted(base):
+        b = base[key]
+        o = opt.get(key, {})
+        arch, shape, mesh = key
+        if b.get("status") == "skipped":
+            out.append(f"| {arch} | {shape} | {mesh} | skipped "
+                       f"({b.get('reason', '')[:40]}…) | — | — | — |")
+            continue
+        if b.get("status") != "ok":
+            out.append(f"| {arch} | {shape} | {mesh} | ERROR | — | — | — |")
+            continue
+
+        def gib(r, k1, k2=None):
+            if not r or r.get("status") != "ok":
+                return None
+            v = r["memory"]["peak_per_device"] if k1 == "peak" else \
+                r["collectives"]["total_collective_bytes"]
+            return v / 2 ** 30
+        pb, po = gib(b, "peak"), gib(o, "peak")
+        cb, co = gib(b, "coll"), gib(o, "coll")
+        pstr = f"{pb:.1f}→{po:.1f}" if po is not None else f"{pb:.1f}"
+        cstr = f"{cb:.2f}→{co:.2f}" if co is not None else f"{cb:.2f}"
+        out.append(f"| {arch} | {shape} | {mesh} | ok | {pstr} | {cstr} | "
+                   f"{b.get('compile_s', '—')} |")
+    n_ok = sum(1 for r in base.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in base.values() if r.get("status") == "skipped")
+    out.append("")
+    out.append(f"**{n_ok} ok / {n_skip} skipped (documented long_500k "
+               f"policy) / {len(base)} total.**")
+    return "\n".join(out)
+
+
+def roofline_section(dirname="experiments/dryrun_opt", tag="optimized"):
+    rows = roofline.build_table(os.path.join(ROOT, dirname))
+    out = [f"### Roofline terms — single pod (16×16), {tag} sharding", "",
+           roofline.markdown_table(rows), ""]
+    counts = {b: sum(r["bottleneck"] == b for r in rows)
+              for b in ("compute", "memory", "collective")}
+    out.append(f"Bottleneck split: {counts}.")
+    return "\n".join(out)
+
+
+def csv_table(name, cols=None, title=""):
+    path = os.path.join(ROOT, "experiments", "bench", f"{name}.csv")
+    if not os.path.exists(path):
+        return f"*{name}.csv missing*"
+    rows = list(csv.DictReader(open(path)))
+    if not rows:
+        return f"*{name}.csv empty*"
+    cols = cols or list(rows[0].keys())
+    out = [f"### {title or name}", "",
+           "| " + " | ".join(cols) + " |", "|" + "---|" * len(cols)]
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c, "")
+            try:
+                f = float(v)
+                v = f"{f:.4g}"
+            except ValueError:
+                pass
+            cells.append(str(v))
+        out.append("| " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def main():
+    print(dryrun_section())
+    print()
+    print("## §Roofline")
+    print()
+    print("Terms: compute = FLOPs/(chips × 197 TF bf16); memory = analytic "
+          "HBM bytes/(chips × 819 GB/s); collective = per-device HLO "
+          "collective bytes / 50 GB/s (conservative SINGLE-link ICI — "
+          "multi-link torus axes would divide this by the per-axis link "
+          "count, so collective terms are upper bounds). 6ND/HLO = "
+          "mode-appropriate model FLOPs (6ND train / 2ND inference) over "
+          "compiled FLOPs — low values expose replicated or capacity-"
+          "padded compute; >1 means the compiled path does less than the "
+          "dense-equivalent model math (e.g. sliding-window attention).")
+    print()
+    print(roofline_section("experiments/dryrun", "baseline"))
+    print()
+    print(roofline_section("experiments/dryrun_opt", "optimized"))
+    print()
+    rows_mp = roofline.build_table(
+        os.path.join(ROOT, "experiments/dryrun_opt"), mesh="pod2x16x16")
+    if rows_mp:
+        print("### Roofline terms — multi-pod (2×16×16), optimized "
+              "sharding")
+        print()
+        print(roofline.markdown_table(rows_mp))
+        print()
+    print("## §Paper-validation tables")
+    print()
+    for name, cols, title in [
+        ("fig2_temperature", None, "Fig. 2 — latency & resampling vs T"),
+        ("fig4_hparams", None, "Fig. 4 — K / β ablation"),
+        ("fig5_adaptivity", None, "Fig. 5 — adaptivity (η=0 vs η>0)"),
+        ("fig6_compare", None, "Fig. 6 — methods incl. baselines"),
+        ("bits_table", None, "Bits/token accounting (eqs. 1/2/5)"),
+        ("thm_checks", None, "Theorem 1 & 2 empirical checks"),
+        ("kernel_bench", None, "Kernel microbench"),
+        ("ell_resolution", None,
+         "Extra ablation — lattice resolution ℓ (Thm-1 K/4ℓ term)"),
+        ("draft_scale", None,
+         "Extra ablation — draft capacity (Thm-1 mismatch term)"),
+    ]:
+        print(csv_table(name, cols, title))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Reproduce the paper's headline result (Fig. 2): the K-SQS / C-SQS
+crossover — fixed top-K wins in low-temperature (peaked) regimes, the
+conformal threshold wins when sampling uncertainty grows.
+
+    PYTHONPATH=src python examples/temperature_crossover.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import fig2_temperature  # noqa: E402
+
+
+def main():
+    rows, path = fig2_temperature.run()
+    by = {}
+    for r in rows:
+        by.setdefault(r["temperature"], {})[r["method"]] = r
+    print(f"{'T':>5} | {'K-SQS lat(ms)':>14} {'resmp':>6} | "
+          f"{'C-SQS lat(ms)':>14} {'resmp':>6} | winner")
+    for T in sorted(by):
+        k, c = by[T]["ksqs"], by[T]["csqs"]
+        w = "K-SQS" if k["latency_per_batch_s"] < c["latency_per_batch_s"] \
+            else "C-SQS"
+        print(f"{T:5.2f} | {k['latency_per_batch_s']*1e3:14.1f} "
+              f"{k['resampling_rate']:6.3f} | "
+              f"{c['latency_per_batch_s']*1e3:14.1f} "
+              f"{c['resampling_rate']:6.3f} | {w}")
+    print(f"\nfull data -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end training driver: train a draft SLM and a target LLM pair on
+the synthetic corpus and save checkpoints for the serving examples.
+
+By default trains the GPT-Neo-shaped pair (the paper's setup) at smoke
+scale for a few hundred steps — bump --steps/--no-smoke on real hardware.
+
+    PYTHONPATH=src python examples/train_draft_slm.py --steps 300
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gptneo-1.3b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=48)
+    args = ap.parse_args()
+
+    for role, extra, steps in [
+        ("target", ["--smoke"], args.steps),
+        ("draft", ["--smoke", "--draft-scale", "2"], args.steps // 2),
+    ]:
+        cmd = [sys.executable, "-m", "repro.launch.train",
+               "--arch", args.arch, *extra,
+               "--steps", str(steps), "--batch", str(args.batch),
+               "--seq", str(args.seq),
+               "--out", f"experiments/ckpt/{args.arch}-{role}"]
+        print("+", " ".join(cmd), flush=True)
+        subprocess.run(cmd, check=True)
+    print("checkpoints in experiments/ckpt/ — use with "
+          "examples/edge_cloud_serve.py")

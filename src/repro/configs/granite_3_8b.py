@@ -1,0 +1,12 @@
+"""Granite-3.0-8B: dense GQA kv=8 [hf:ibm-granite/granite-3.0-2b-base]."""
+from repro.configs.base import ModelConfig, register
+
+
+@register
+def granite_3_8b() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-8b", family="dense",
+        source="hf:ibm-granite/granite-3.0-2b-base",
+        n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=12800, vocab=49155, rope_theta=1e4,
+    )

@@ -1,0 +1,8 @@
+from repro.core.slq import lattice_quantize, slq_distortion_bound, tv_distance
+from repro.core.sqs import (SQSResult, softmax_temp, sparsify_topk,
+                            sparsify_threshold, dense_qs, no_compression)
+from repro.core import bits, channel, conformal, theory
+from repro.core.verify import verify as sd_verify
+from repro.core.verify import acceptance_prob, VerifyResult
+from repro.core.engine import (EdgeCloudEngine, MethodConfig, EngineConfig,
+                               rollback_cache, summarize)

@@ -1,0 +1,116 @@
+"""Uplink bit accounting (paper eqs. (1), (2), (5) + C-SQS overhead), and a
+beyond-paper gap-coded subset representation (EXPERIMENTS §Perf).
+
+log2 C(n, k) at vocabulary scale involves lgamma(~1e5) ≈ 1e6 — fp32
+cancellation would cost whole bits, so tables are precomputed in float64
+(V and ℓ are static per engine; only K is traced) and looked up inside the
+drafting scan.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy.special import gammaln
+
+
+def _log2_binom_f64(n, k):
+    n = np.asarray(n, np.float64)
+    k = np.clip(np.asarray(k, np.float64), 0.0, n)
+    return (gammaln(n + 1) - gammaln(k + 1) - gammaln(n - k + 1)) \
+        / math.log(2.0)
+
+
+@functools.lru_cache(maxsize=64)
+def _subset_table(V: int):
+    """log2 C(V, k) for k = 0..V (f64 → f32).  Cached as NUMPY so the
+    cache never captures a tracer (tables may first be built inside a
+    scan trace)."""
+    k = np.arange(V + 1)
+    return _log2_binom_f64(V, k).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=64)
+def _payload_table(V: int, ell: int):
+    """log2 C(ℓ + k − 1, k − 1) for k = 0..V.  Cached as NUMPY."""
+    k = np.arange(V + 1, dtype=np.float64)
+    t = _log2_binom_f64(ell + k - 1.0, np.maximum(k - 1.0, 0.0))
+    t[0] = 0.0
+    return t.astype(np.float32)
+
+
+def log2_binom(n, k):
+    """Generic f64-accurate log2 C(n, k) (host computation, static args)."""
+    return jnp.asarray(_log2_binom_f64(n, k), jnp.float32)
+
+
+def payload_bits(K, ell, V: int | None = None):
+    """eq. (2): bits for the non-zero lattice counts,
+    log2 C(ℓ + K − 1, K − 1).  K may be traced if V (table size) given."""
+    if isinstance(K, (int, float)):
+        return log2_binom(ell + K - 1.0, max(K - 1.0, 0.0))
+    Vmax = V or 300000
+    table = jnp.asarray(_payload_table(int(Vmax), int(ell)))
+    return jnp.take(table, jnp.clip(K.astype(jnp.int32), 0, Vmax))
+
+
+def subset_bits_topk(V: int, K):
+    """eq. (5): K-SQS subset description, log2 C(V, K)."""
+    if isinstance(K, (int, float)):
+        return log2_binom(V, K)
+    return jnp.take(jnp.asarray(_subset_table(int(V))),
+                    jnp.clip(K.astype(jnp.int32), 0, V))
+
+
+def subset_bits_conformal(V: int, K):
+    """C-SQS: ⌈log2 C(V, K)⌉ + ⌈log2 V⌉ (subset + cardinality overhead)."""
+    return jnp.ceil(subset_bits_topk(V, K)) + math.ceil(math.log2(V))
+
+
+def token_bits(V: int, K, ell: int, adaptive: bool):
+    """eq. (1): b = b̃(K) + b̂(K, ℓ) for one draft token."""
+    sub = subset_bits_conformal(V, K) if adaptive else subset_bits_topk(V, K)
+    return sub + payload_bits(K, ell, V=V)
+
+
+def dense_qs_bits(V: int, ell: int):
+    """Baseline [22]: dense lattice quantization of the full vocabulary
+    (no subset description needed; K = V)."""
+    return payload_bits(float(V), ell)
+
+
+def uncompressed_bits(V: int, bits_per_prob: int = 16):
+    """Baseline: raw fp16 distribution uplink."""
+    return float(V * bits_per_prob)
+
+
+# ----------------------------------------------------------------------
+# Beyond-paper: gap-coded subset indices.
+#
+# The paper charges log2 C(V,K) for the support set — optimal only if all
+# K-subsets were equally likely.  Real BPE vocabularies concentrate the
+# support on low token ids (frequency-sorted), so Elias-γ coding of the
+# sorted index *gaps* is shorter in practice.  This is a pure encoding
+# change: the cloud decodes the same subset, the SD guarantee is untouched.
+# ----------------------------------------------------------------------
+def elias_gamma_bits(x):
+    """bits to Elias-γ encode integer x ≥ 1: 2⌊log2 x⌋ + 1."""
+    x = jnp.maximum(jnp.asarray(x, jnp.float32), 1.0)
+    return 2.0 * jnp.floor(jnp.log2(x)) + 1.0
+
+
+def gap_code_subset_bits(mask):
+    """Empirical gap-coded subset bits for a support mask (..., V)."""
+    V = mask.shape[-1]
+    idx = jnp.arange(V, dtype=jnp.int32)
+    # previous on-support index before each position (exclusive running max)
+    prev = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(mask, idx, -1), axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full(prev.shape[:-1] + (1,), -1, prev.dtype), prev[..., :-1]],
+        axis=-1)
+    gaps = jnp.where(mask, idx - prev, 1)
+    return jnp.where(mask, elias_gamma_bits(gaps), 0.0).sum(-1)

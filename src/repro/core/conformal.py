@@ -1,0 +1,53 @@
+"""Online conformal threshold control for C-SQS (paper §3).
+
+Update rule, eq. (8):    β_{n+1} = β_n − η · (Σ_{x∉X_n} q_n(x) − α)
+
+Theorem 2 guarantee:     (1/T) Σ α_n(X_n) ≤ α + (|β₁| + 1 + ηα)/(ηT)
+
+Checkpoint / backtracking (Algorithm 1, lines 12–13): during drafting the
+edge applies the update for every generated token; after cloud feedback
+only the updates belonging to ACCEPTED tokens (plus the one resampled/
+bonus token, whose q was computed at the rejection position) are kept.
+Because updates are sequential-scalar, "keep the first T+1 updates" means
+selecting β at index min(T+1, L) from the drafted trajectory — no replay
+needed.  ``backtrack`` implements exactly that.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ConformalConfig(NamedTuple):
+    alpha: float = 5e-4        # target average dropped mass
+    eta: float = 1e-3          # learning rate
+    beta0: float = 1e-3        # initial threshold β₁¹
+
+
+def update(beta, dropped_mass, alpha: float, eta: float):
+    """eq. (8).  beta, dropped_mass: (B,) — per-sequence thresholds."""
+    return beta - eta * (dropped_mass - alpha)
+
+
+def backtrack(beta_traj, n_keep):
+    """beta_traj: (L+1, B) thresholds recorded during drafting —
+    beta_traj[0] is the pre-batch value, beta_traj[i] the value AFTER the
+    i-th in-batch update.  n_keep: (B,) = T^t + 1 updates to keep
+    (accepted tokens + the resampled/bonus token).  Returns β₁^{t+1}."""
+    L = beta_traj.shape[0] - 1
+    idx = jnp.clip(n_keep, 0, L)
+    return jnp.take_along_axis(beta_traj, idx[None, :], axis=0)[0]
+
+
+def thm2_bound(alpha: float, eta: float, beta0: float, T) -> jnp.ndarray:
+    """RHS of Theorem 2: α + (|β₁¹| + 1 + ηα)/(ηT)."""
+    T = jnp.asarray(T, jnp.float32)
+    return alpha + (abs(beta0) + 1.0 + eta * alpha) / (eta * T)
+
+
+def beta_envelope(alpha: float, eta: float):
+    """Lemma 4: β ∈ [−η(1−α), 1 + ηα] for all n (after burn-in from β₀
+    inside the interval)."""
+    return (-eta * (1.0 - alpha), 1.0 + eta * alpha)

@@ -1,0 +1,331 @@
+"""Edge–cloud SQS speculative decoding engine (paper Algorithm 1).
+
+One engine instance wires together:
+  - the edge SLM (draft model, any repro architecture),
+  - a sparsify-quantize-sample method (K-SQS / C-SQS / dense-QS / raw),
+  - the modeled uplink channel,
+  - the cloud LLM (target model) with parallel verification.
+
+Per SD batch t (one ``round``):
+  edge   : scan L_max+1 decode steps — step i processes token i of
+           [x_last, d_1 … d_L]; each step computes q_n, sparsifies
+           (threshold β_n for C-SQS, with eq.-8 updates applied inline),
+           lattice-quantizes to q̂_n, samples d_{n} ~ q̂_n, accrues bits.
+           The (L_max+1)-th step only advances cache/state past d_L.
+  budget : L^t = max prefix of drafts with Σ bits ≤ B  (paper §4).
+  uplink : Σ live bits → modeled channel time.
+  cloud  : ONE extend_step over [x_last, d_1 … d_L] (parallel verify),
+           accept/reject per Leviathan-et-al. against q̂, resample from
+           the residual or sample the bonus token.
+  sync   : β backtracks to the value after the last kept update
+           (Algorithm 1 lines 12–13); caches roll back — positionally for
+           attention KV, via per-step state snapshots for SSM/hybrid
+           blocks (beyond-paper: makes SD correct for Mamba/xLSTM/Jamba
+           targets, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import bits as bits_mod
+from repro.core import channel as channel_mod
+from repro.core import conformal
+from repro.core import sqs as sqs_mod
+from repro.core import verify as verify_mod
+from repro.models import model as model_mod
+
+SEQ_BLOCKS = ("mamba", "mlstm", "slstm")
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodConfig:
+    name: str = "csqs"               # ksqs | csqs | qs | uncompressed
+    K: int = 64                      # K-SQS cardinality
+    ell: int = 100                   # lattice resolution ℓ
+    alpha: float = 5e-4              # C-SQS target deviation
+    eta: float = 1e-3                # C-SQS learning rate
+    beta0: float = 1e-3              # C-SQS initial threshold
+    use_kernels: bool = False        # Pallas fused SQS path (repro.kernels)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    L_max: int = 8                   # max drafts per batch
+    bit_budget: float = 5000.0       # uplink budget B per batch (bits)
+    temperature: float = 1.0
+    collect_theory: bool = False     # keep dense q/p for Theorem-1 logging
+
+
+def _is_stateful(cfg: ModelConfig) -> bool:
+    return any(b in SEQ_BLOCKS for b in cfg.block_pattern)
+
+
+def _seq_periods(cfg: ModelConfig):
+    return [f"p{i}" for i in range(cfg.period)
+            if cfg.block_pattern[i] in SEQ_BLOCKS]
+
+
+def rollback_cache(cfg: ModelConfig, cache, traj, n_keep):
+    """Restore sequential-state leaves to the snapshot after position
+    ``n_keep − 1`` (n_keep ≥ 1 tokens kept).  Positional (KV) leaves need
+    no rollback.  traj leaves: (N, B, S, ...); cache leaves: (N, B, ...)."""
+    if traj is None:
+        return cache
+    idx = jnp.maximum(n_keep - 1, 0)
+
+    def select(t):
+        ix = idx.reshape((1, -1, 1) + (1,) * (t.ndim - 3))
+        return jnp.take_along_axis(t, ix, axis=2)[:, :, 0]
+
+    new_body = dict(cache["body"])
+    for pname in _seq_periods(cfg):
+        new_body[pname] = jax.tree.map(select, traj[pname])
+    out = dict(cache)
+    out["body"] = new_body
+    return out
+
+
+class EdgeCloudEngine:
+    def __init__(self, draft_cfg: ModelConfig, draft_params,
+                 target_cfg: ModelConfig, target_params,
+                 method: MethodConfig, engine: EngineConfig = EngineConfig(),
+                 channel: channel_mod.ChannelConfig =
+                 channel_mod.ChannelConfig(),
+                 seed: int = 0):
+        assert draft_cfg.vocab == target_cfg.vocab, "shared vocabulary"
+        self.dc, self.tc = draft_cfg, target_cfg
+        self.dp, self.tp = draft_params, target_params
+        self.m, self.e, self.ch = method, engine, channel
+        self.key = jax.random.PRNGKey(seed)
+        self.V = draft_cfg.vocab
+        self._draft_jit = jax.jit(self._draft_round)
+        self._verify_jit = jax.jit(self._verify_round)
+        self._target_stateful = _is_stateful(target_cfg)
+
+    # ------------------------------------------------------------------
+    def _sparsify(self, q, beta, logits=None):
+        m = self.m
+        if m.use_kernels and m.name in ("ksqs", "csqs") and logits is not None:
+            from repro.kernels import ops as kops
+            if m.name == "ksqs":
+                r = kops.sqs_topk(logits, m.K,
+                                  temperature=self.e.temperature, ell=m.ell)
+                bits = bits_mod.token_bits(self.V, float(m.K), m.ell,
+                                           adaptive=False)
+                bits = jnp.broadcast_to(bits, r.dropped.shape)
+            else:
+                r = kops.sqs_threshold(logits, beta,
+                                       temperature=self.e.temperature,
+                                       ell=m.ell)
+                bits = bits_mod.token_bits(self.V, r.K.astype(jnp.float32),
+                                           m.ell, adaptive=True)
+            gap_bits = (bits_mod.gap_code_subset_bits(r.mask)
+                        + bits_mod.payload_bits(r.K.astype(jnp.float32),
+                                                m.ell)
+                        + (jnp.ceil(jnp.log2(float(self.V)))
+                           if m.name == "csqs" else 0.0))
+            return r, bits, gap_bits
+        if m.name == "ksqs":
+            r = sqs_mod.sparsify_topk(q, m.K, m.ell)
+            bits = bits_mod.token_bits(self.V, float(m.K), m.ell,
+                                       adaptive=False)
+            bits = jnp.broadcast_to(bits, r.dropped.shape)
+        elif m.name == "csqs":
+            r = sqs_mod.sparsify_threshold(q, beta, m.ell)
+            bits = bits_mod.token_bits(self.V, r.K.astype(jnp.float32),
+                                       m.ell, adaptive=True)
+        elif m.name == "qs":
+            r = sqs_mod.dense_qs(q, m.ell)
+            bits = jnp.broadcast_to(bits_mod.dense_qs_bits(self.V, m.ell),
+                                    r.dropped.shape)
+        elif m.name == "uncompressed":
+            r = sqs_mod.no_compression(q)
+            bits = jnp.full(r.dropped.shape,
+                            bits_mod.uncompressed_bits(self.V))
+        else:
+            raise ValueError(self.m.name)
+        gap_bits = (bits_mod.gap_code_subset_bits(r.mask)
+                    + bits_mod.payload_bits(r.K.astype(jnp.float32), m.ell)
+                    + (jnp.ceil(jnp.log2(float(self.V)))
+                       if m.name == "csqs" else 0.0))
+        return r, bits, gap_bits
+
+    def _draft_round(self, dp, cache, x_last, pos, beta, key):
+        """Returns drafts d_1..d_L, per-token q̂/q/bits/β trajectory and the
+        advanced edge cache (+ per-step sequential-state snapshots)."""
+        L = self.e.L_max
+        ecfg = self.dc
+        seq_p = _seq_periods(ecfg)
+
+        def step(carry, i):
+            cache, tok, beta, key, pos = carry
+            key, k1 = jax.random.split(key)
+            logits, cache = model_mod.decode_step(ecfg, dp, tok, cache, pos)
+            q = sqs_mod.softmax_temp(logits, self.e.temperature)
+            r, bits, gap_bits = self._sparsify(q, beta, logits=logits)
+            nxt = jax.random.categorical(
+                k1, jnp.log(jnp.maximum(r.q_hat, 1e-30))).astype(jnp.int32)
+            new_beta = conformal.update(beta, r.dropped, self.m.alpha,
+                                        self.m.eta) \
+                if self.m.name == "csqs" else beta
+            snap = {p: cache["body"][p] for p in seq_p}
+            ys = dict(token=nxt, q_hat=r.q_hat, q=q, bits=bits,
+                      gap_bits=gap_bits, dropped=r.dropped, K=r.K,
+                      beta=new_beta, snap=snap)
+            return (cache, nxt, new_beta, key, pos + 1), ys
+
+        carry0 = (cache, x_last, beta, key, pos)
+        carry, ys = jax.lax.scan(step, carry0, jnp.arange(L + 1))
+        cache = carry[0]
+        return cache, ys
+
+    def _verify_round(self, tp, cache, tokens_in, pos, q_hat, live, key):
+        """tokens_in: (B, L+1) = [x_last, d_1..d_L]."""
+        if self._target_stateful:
+            logits, cache, traj = model_mod.extend_step(
+                self.tc, tp, tokens_in, cache, pos, collect_traj=True)
+        else:
+            logits, cache = model_mod.extend_step(self.tc, tp, tokens_in,
+                                                  cache, pos)
+            traj = None
+        p = sqs_mod.softmax_temp(logits, self.e.temperature)  # (B, L+1, V)
+        res = verify_mod.verify(key, tokens_in[:, 1:], q_hat, p, live)
+        return res, p, cache, traj
+
+    # ------------------------------------------------------------------
+    def prefill(self, prompts):
+        """prompts: (B, S0) int32.  Prepares both caches; the last prompt
+        token becomes x_last (first token the draft loop processes)."""
+        B, S0 = prompts.shape
+        self.B = B
+        total = S0 + 4096  # cache capacity headroom
+        enc = None
+        _, self.dcache = model_mod.prefill(self.dc, self.dp,
+                                           prompts[:, :-1],
+                                           cache_len=total)
+        _, self.tcache = model_mod.prefill(self.tc, self.tp,
+                                           prompts[:, :-1],
+                                           cache_len=total)
+        self.x_last = prompts[:, -1].astype(jnp.int32)
+        self.pos = jnp.full((B,), S0 - 1, jnp.int32)
+        self.beta = jnp.full((B,), self.m.beta0, jnp.float32)
+        self.out_tokens = [[] for _ in range(B)]
+
+    # ------------------------------------------------------------------
+    def run_round(self):
+        """One SD batch.  Returns a metrics dict (host values)."""
+        L = self.e.L_max
+        self.key, kd, kv = jax.random.split(self.key, 3)
+
+        t0 = time.perf_counter()
+        dcache, ys = self._draft_jit(self.dp, self.dcache, self.x_last,
+                                     self.pos, self.beta, kd)
+        jax.block_until_ready(ys["token"])
+        t_slm = time.perf_counter() - t0
+
+        drafts = ys["token"][:L].swapaxes(0, 1)           # (B, L)
+        q_hat = ys["q_hat"][:L].swapaxes(0, 1)            # (B, L, V)
+        bits = np.asarray(ys["bits"][:L]).T               # (B, L)
+        gap_bits = np.asarray(ys["gap_bits"][:L]).T
+        dropped = np.asarray(ys["dropped"][:L + 1]).T     # (B, L+1)
+        Ks = np.asarray(ys["K"][:L]).T
+
+        # budget-driven L^t (paper §4): stop when bits exhausted, >= 1
+        cum = np.cumsum(bits, axis=1)
+        live_np = cum <= self.e.bit_budget
+        live_np[:, 0] = True
+        live = jnp.asarray(live_np)
+
+        tokens_in = jnp.concatenate([self.x_last[:, None], drafts], axis=1)
+        t0 = time.perf_counter()
+        res, p, tcache, traj = self._verify_jit(self.tp, self.tcache,
+                                                tokens_in, self.pos, q_hat,
+                                                live, kv)
+        jax.block_until_ready(res.n_accept)
+        t_llm = time.perf_counter() - t0
+
+        T = res.n_accept                                   # (B,)
+        # --- rollbacks ---
+        self.tcache = rollback_cache(self.tc, tcache, traj, T + 1)
+        edge_traj = ({p_: ys["snap"][p_] for p_ in _seq_periods(self.dc)}
+                     if _is_stateful(self.dc) else None)
+        if edge_traj is not None:
+            edge_traj = jax.tree.map(
+                lambda a: jnp.moveaxis(a, 0, 2), edge_traj)  # (N,B,L+1,...)
+        self.dcache = rollback_cache(self.dc, dcache, edge_traj, T + 1)
+        # --- β backtrack (Alg. 1 lines 12-13): keep updates 0..T ---
+        if self.m.name == "csqs":
+            beta_traj = ys["beta"]                         # (L+1, B)
+            self.beta = jnp.take_along_axis(beta_traj, T[None, :],
+                                            axis=0)[0]
+        # --- bookkeeping ---
+        self.pos = self.pos + T + 1
+        self.x_last = res.new_token
+        T_np = np.asarray(T)
+        am = np.asarray(res.accept_mask)
+        nt = np.asarray(res.new_token)
+        dr = np.asarray(drafts)
+        for b in range(self.B):
+            self.out_tokens[b].extend(dr[b, :T_np[b]].tolist())
+            self.out_tokens[b].append(int(nt[b]))
+
+        live_bits = float((bits * live_np).sum() / self.B)
+        live_gap_bits = float((gap_bits * live_np).sum() / self.B)
+        t_up = channel_mod.uplink_time(self.ch, live_bits)
+        t_down = channel_mod.downlink_time(
+            self.ch, channel_mod.feedback_bits(L, self.V))
+        metrics = {
+            "n_accept": T_np,
+            "rejected": np.asarray(res.rejected),
+            "L_live": live_np.sum(1),
+            "bits": live_bits,
+            "gap_bits": live_gap_bits,
+            "K_mean": float((Ks * live_np).sum() / max(live_np.sum(), 1)),
+            "dropped_mean": float(dropped[:, :L].mean()),
+            "t_slm": t_slm, "t_up": t_up, "t_llm": t_llm, "t_down": t_down,
+            "t_total": t_slm + t_up + t_llm + t_down,
+            "tokens_out": 1 + T_np,
+        }
+        if self.e.collect_theory:
+            metrics["q"] = np.asarray(ys["q"][:L].swapaxes(0, 1))
+            metrics["q_hat"] = np.asarray(q_hat)
+            metrics["p"] = np.asarray(p)
+            metrics["dropped_seq"] = dropped
+            metrics["K_seq"] = Ks
+        return metrics
+
+    # ------------------------------------------------------------------
+    def run(self, prompts, n_rounds: int):
+        self.prefill(jnp.asarray(prompts, jnp.int32))
+        rounds = [self.run_round() for _ in range(n_rounds)]
+        return rounds, self.out_tokens
+
+
+def summarize(rounds):
+    """Aggregate per-round metrics into the paper's two headline numbers:
+    average end-to-end latency per batch and resampling rate."""
+    resample = np.mean([r["rejected"].mean() for r in rounds])
+    lat = np.mean([r["t_total"] for r in rounds])
+    toks = np.sum([r["tokens_out"].mean() for r in rounds])
+    return {
+        "resampling_rate": float(resample),
+        "latency_per_batch_s": float(lat),
+        "latency_per_token_s": float(lat * len(rounds) / max(toks, 1)),
+        "bits_per_batch": float(np.mean([r["bits"] for r in rounds])),
+        "gap_bits_per_batch": float(np.mean([r["gap_bits"]
+                                             for r in rounds])),
+        "accept_rate": float(np.mean(
+            [r["n_accept"].mean() / max(r["L_live"].mean(), 1)
+             for r in rounds])),
+        "mean_K": float(np.mean([r["K_mean"] for r in rounds])),
+        "tokens_per_batch": float(np.mean([r["tokens_out"].mean()
+                                           for r in rounds])),
+    }

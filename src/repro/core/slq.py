@@ -1,0 +1,60 @@
+"""Sparse Lattice-based Quantization (paper Appendix A.1, Algorithm 2).
+
+Maps a (sparsified, renormalised) probability vector onto the resolution-ℓ
+lattice inside the probability simplex:  q̂[i] = b[i]/ℓ with Σ b[i] = ℓ,
+b[i] non-negative integers.  Rounding is nearest-integer followed by the
+ζ-ranked exact-sum correction of Algorithm 2 lines 8–16, vectorised with
+rank-select instead of data-dependent loops (TPU-friendly; the Pallas
+kernel path reuses the same construction — see repro/kernels).
+
+Guarantee used by Theorem 1:  TV(q̃, q̂) ≤ K/(4ℓ).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ranks(x, axis=-1):
+    """rank[i] = position of x[i] in ascending sort order (0 = smallest)."""
+    order = jnp.argsort(x, axis=axis)
+    return jnp.argsort(order, axis=axis)
+
+
+def lattice_quantize(q_tilde, ell: int, mask=None):
+    """Algorithm 2 (lines 5-17), batched over leading axes.
+
+    q_tilde: (..., V) renormalised sparse distribution (zero off-support).
+    mask:    (..., V) bool support set; default = q_tilde > 0.
+    Returns (q_hat, b) with q_hat = b/ℓ, Σ b = ℓ exactly, b int32 ≥ 0.
+    """
+    q = q_tilde.astype(jnp.float32)
+    if mask is None:
+        mask = q > 0
+    b = jnp.floor(ell * q + 0.5)                       # line 6
+    b = jnp.where(mask, b, 0.0)
+    zeta = b - ell * q                                 # line 9 (ζ = b' − ℓq)
+    delta = (b.sum(-1) - ell)[..., None]               # ℓ' − ℓ
+
+    # Correction (lines 10-15), rank-select form:
+    #   δ > 0: decrement the δ entries with LARGEST ζ (only b>0, on-support)
+    #   δ < 0: increment the |δ| entries with SMALLEST ζ (on-support)
+    zeta_dec = jnp.where(mask & (b > 0), zeta, -jnp.inf)
+    zeta_inc = jnp.where(mask, zeta, jnp.inf)
+    rank_desc = _ranks(-zeta_dec)      # 0 = largest ζ, ties: earliest index
+    rank_asc = _ranks(zeta_inc)        # 0 = smallest ζ, ties: earliest index
+    dec = (rank_desc < delta) & mask & (b > 0)
+    inc = (rank_asc < -delta) & mask
+    b = b - dec.astype(jnp.float32) + inc.astype(jnp.float32)
+    q_hat = b / ell
+    return q_hat, b.astype(jnp.int32)
+
+
+def slq_distortion_bound(K, ell):
+    """Theorem 1 lattice-distortion term K/(4ℓ)."""
+    return jnp.asarray(K, jnp.float32) / (4.0 * ell)
+
+
+def tv_distance(p, q, axis=-1):
+    return 0.5 * jnp.abs(p.astype(jnp.float32)
+                         - q.astype(jnp.float32)).sum(axis)

@@ -1,0 +1,39 @@
+"""Theorem 1 instrumentation: per-token decomposition of the rejection
+bound into SLM–LLM discrepancy and SLQ distortion, plus the exact
+rejection probability TV(q̂, p) (eq. 14–15).
+
+Used by benchmarks/thm1_bound.py to validate the bound against measured
+resampling counts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.slq import tv_distance
+
+
+class Thm1Terms(NamedTuple):
+    mismatch: jnp.ndarray      # TV(q, p)              — model discrepancy
+    dropped: jnp.ndarray       # α_n(X_n)              — sparsification
+    lattice: jnp.ndarray       # K_n / (4 ℓ_n)         — quantization
+    exact_rej: jnp.ndarray     # TV(q̂, p)             — true P(reject)
+
+
+def thm1_terms(q, p, q_hat, dropped, K, ell) -> Thm1Terms:
+    """All inputs per-token (leading axes broadcast): q, p, q_hat (..., V);
+    dropped, K scalars/(...)."""
+    return Thm1Terms(
+        mismatch=tv_distance(q, p),
+        dropped=jnp.asarray(dropped, jnp.float32),
+        lattice=jnp.asarray(K, jnp.float32) / (4.0 * ell),
+        exact_rej=tv_distance(q_hat, p),
+    )
+
+
+def thm1_bound_total(terms: Thm1Terms):
+    """Upper bound Σ (mismatch + dropped + lattice) vs Σ exact."""
+    ub = (terms.mismatch + terms.dropped + terms.lattice).sum()
+    exact = terms.exact_rej.sum()
+    return exact, ub

@@ -1,0 +1,66 @@
+"""Speculative-decoding verification (cloud side).
+
+Exact Leviathan-et-al. accept/resample against the *quantized* draft
+distribution q̂ — the Quantize-and-Sample guarantee [22]: because the edge
+sampled each draft token from q̂ and the cloud verifies against the same
+q̂, accepted+resampled tokens are distributed exactly as target samples.
+
+Vectorised over the batch with per-sequence acceptance counts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VerifyResult(NamedTuple):
+    n_accept: jnp.ndarray       # (B,) T^t = accepted draft tokens
+    new_token: jnp.ndarray      # (B,) resampled (if rejected) or bonus token
+    rejected: jnp.ndarray       # (B,) bool: was a draft token rejected?
+    accept_mask: jnp.ndarray    # (B, L) which draft tokens were accepted
+
+
+def verify(key, draft_tokens, q_hat, p_dists, live=None) -> VerifyResult:
+    """draft_tokens: (B, L); q_hat: (B, L, V) quantized draft dists;
+    p_dists: (B, L+1, V) — p_dists[:, i] is the target dist conditioned on
+    everything before draft token i (p_dists[:, L] is the bonus dist).
+    live: (B, L) bool — draft positions within the bit budget L^t."""
+    B, L, V = q_hat.shape
+    if live is None:
+        live = jnp.ones((B, L), jnp.bool_)
+    ku, ks = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, L), jnp.float32, 1e-12, 1.0)
+
+    q_tok = jnp.take_along_axis(q_hat, draft_tokens[..., None],
+                                axis=-1)[..., 0]          # (B, L)
+    p_tok = jnp.take_along_axis(p_dists[:, :L], draft_tokens[..., None],
+                                axis=-1)[..., 0]
+    ratio = p_tok / jnp.maximum(q_tok, 1e-30)
+    ok = (u < jnp.minimum(1.0, ratio)) & live
+    # T = length of the accepted prefix
+    prefix = jnp.cumprod(ok.astype(jnp.int32), axis=-1)   # (B, L)
+    n_accept = prefix.sum(-1)
+    L_live = live.astype(jnp.int32).sum(-1)
+    rejected = n_accept < L_live
+
+    # distribution at the boundary position T (0-indexed into L+1)
+    p_T = jnp.take_along_axis(
+        p_dists, n_accept[:, None, None], axis=1)[:, 0]   # (B, V)
+    q_T = jnp.take_along_axis(
+        jnp.concatenate([q_hat, jnp.zeros((B, 1, V), q_hat.dtype)], axis=1),
+        n_accept[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(p_T - q_T, 0.0)
+    rs = residual.sum(-1, keepdims=True)
+    residual = jnp.where(rs > 1e-30, residual / jnp.maximum(rs, 1e-30), p_T)
+    dist = jnp.where(rejected[:, None], residual, p_T)
+    new_token = jax.random.categorical(ks, jnp.log(jnp.maximum(dist, 1e-30)))
+    return VerifyResult(n_accept, new_token.astype(jnp.int32), rejected,
+                        prefix.astype(jnp.bool_))
+
+
+def acceptance_prob(q_hat, p):
+    """Per-position acceptance probability 1 − TV(q̂, p) (eq. 14)."""
+    return 1.0 - 0.5 * jnp.abs(q_hat.astype(jnp.float32)
+                               - p.astype(jnp.float32)).sum(-1)

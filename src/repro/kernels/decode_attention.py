@@ -1,0 +1,119 @@
+"""Flash-decode GQA kernel (Pallas TPU) with optional int8 KV cache.
+
+Decode attention is HBM-bound: one token's queries stream the whole KV
+cache.  This kernel tiles the cache sequence into VMEM blocks with online
+-softmax accumulators (flash), grouped-query layout (the qpk query heads
+of one KV head share a program), and — the beyond-paper lever for a
+quantization paper — int8 KV with per-(position, head) scales dequantised
+in VMEM, halving cache HBM traffic and capacity.
+
+    grid = (B, nkv, S_blocks)   (S innermost, "arbitrary" semantics)
+    q     : (B, nq, hd)                      bf16/f32
+    k/v   : (B, S, nkv, hd)                  bf16/f32/int8
+    scales: (B, S, nkv) f32                  (int8 mode)
+    pos   : (B,) int32 — entries at index > pos are masked (cache slots
+            beyond the current position are stale/unwritten)
+    out   : (B, nq, hd) f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+S_BLOCK = 512
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, s_block: int, quantized: bool,
+            scale: float):
+    b = pl.program_id(0)
+    sb = pl.program_id(2)
+    n_sb = pl.num_programs(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (qpk, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (BS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, :, 0][:, None]
+        v = v * vs_ref[0, :, 0][:, None]
+
+    s = q @ k.T                                       # (qpk, BS)
+    idx = sb * s_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx <= pos_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (qpk, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                            # (qpk, BS)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(sb == n_sb - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_gqa_decode_call(q, k, v, pos, k_scale=None, v_scale=None, *,
+                          s_block: int = S_BLOCK, interpret: bool = True):
+    """q: (B, nq, hd); k/v: (B, S, nkv, hd); pos: (B,) int32.
+    S must be a multiple of s_block (ops.py pads).  Returns (B, nq, hd)
+    f32."""
+    B, nq, hd = q.shape
+    _, S, nkv, _ = k.shape
+    assert S % s_block == 0, (S, s_block)
+    qpk = nq // nkv
+    quantized = k_scale is not None
+    if not quantized:
+        k_scale = jnp.zeros((B, S, nkv), jnp.float32)
+        v_scale = jnp.zeros((B, S, nkv), jnp.float32)
+    grid = (B, nkv, S // s_block)
+    kernel = functools.partial(
+        _kernel, s_block=s_block, quantized=quantized,
+        scale=1.0 / float(hd) ** 0.5)
+    qg = q.reshape(B, nkv, qpk, hd)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                # pos (SMEM-ish)
+            pl.BlockSpec((1, 1, qpk, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, s_block, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, s_block, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, s_block, 1), lambda b, h, s: (b, s, h)),
+            pl.BlockSpec((1, s_block, 1), lambda b, h, s: (b, s, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpk, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nkv, qpk, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, qg, k, v, k_scale, v_scale)
+    return out.reshape(B, nq, hd)
+
+
+# ----------------------------------------------------------------------
+# int8 KV quantization helpers (per position × head absmax)
+# ----------------------------------------------------------------------
+def quantize_kv(x):
+    """x: (B, S, nkv, hd) -> (int8 values, f32 scales (B, S, nkv))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)

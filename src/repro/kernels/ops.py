@@ -1,0 +1,96 @@
+"""Public jit'd wrappers around the Pallas SQS kernels.
+
+``INTERPRET`` defaults to True in this CPU container (kernel bodies execute
+in Python for correctness validation); on real TPU set
+``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1).
+
+The wrappers handle vocab padding (lane multiple of 128, -inf logits) and
+adapt kernel outputs to the ``core.sqs.SQSResult`` interface, so the engine
+can swap jnp ↔ Pallas paths with one flag.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sqs import SQSResult
+from repro.kernels import ref as ref_mod
+from repro.kernels import sqs_fused as k
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "") != "1"
+
+
+def _pad_logits(logits):
+    B, V = logits.shape
+    Vp = k.pad_vocab(V)
+    if Vp == V:
+        return logits.astype(jnp.float32), V
+    pad = jnp.full((B, Vp - V), -jnp.inf, jnp.float32)
+    return jnp.concatenate([logits.astype(jnp.float32), pad], axis=-1), V
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "ell",
+                                             "use_ref"))
+def sqs_threshold(logits, beta, temperature: float = 1.0, ell: int = 100,
+                  use_ref: bool = False) -> SQSResult:
+    """C-SQS edge step, fused:  softmax(T) → support {q ≥ β} → dropped
+    mass → lattice counts with Σb = ℓ exact.  logits: (B, V); beta: (B,)."""
+    lp, V = _pad_logits(logits)
+    beta2 = jnp.stack([beta, beta], axis=-1).astype(jnp.float32)
+    fn = ref_mod.sqs_fused_ref if use_ref else functools.partial(
+        k.sqs_fused_call, interpret=INTERPRET)
+    b, mask, stats = fn(lp, beta2, inv_temp=1.0 / max(temperature, 1e-4),
+                        ell=ell)
+    q_hat = (b[:, :V].astype(jnp.float32) / ell)
+    return SQSResult(q_hat, mask[:, :V].astype(bool), stats[:, 0],
+                     stats[:, 1].astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("K", "temperature", "ell",
+                                             "use_ref"))
+def sqs_topk(logits, K: int, temperature: float = 1.0, ell: int = 100,
+             use_ref: bool = False) -> SQSResult:
+    """K-SQS edge step: bisection top-K threshold + fused quantizer."""
+    lp, V = _pad_logits(logits)
+    it = 1.0 / max(temperature, 1e-4)
+    # probabilities for the threshold search (same math as the main kernel)
+    x = lp * it
+    m = jnp.max(x, axis=-1, keepdims=True)
+    q = jnp.exp(x - m) / jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True)
+    if use_ref:
+        tau = ref_mod.topk_threshold_ref(q, K)
+        b, mask, stats = ref_mod.sqs_fused_ref(lp, tau, inv_temp=it,
+                                               ell=ell, exact_k=K)
+    else:
+        tau = k.topk_threshold_call(q, K, interpret=INTERPRET)
+        b, mask, stats = k.sqs_fused_call(lp, tau, inv_temp=it, ell=ell,
+                                          exact_k=K, interpret=INTERPRET)
+    q_hat = (b[:, :V].astype(jnp.float32) / ell)
+    return SQSResult(q_hat, mask[:, :V].astype(bool), stats[:, 0],
+                     stats[:, 1].astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref",))
+def gqa_decode(q, k, v, pos, k_scale=None, v_scale=None,
+               use_ref: bool = False):
+    """Flash-decode GQA attention (optional int8 KV).  Pads the cache
+    sequence to the kernel block size; stale/padded slots are masked by
+    ``pos``.  Returns (B, nq, hd) f32."""
+    from repro.kernels import decode_attention as da
+    if use_ref:
+        return ref_mod.gqa_decode_ref(q, k, v, pos, k_scale, v_scale)
+    B, S, nkv, hd = k.shape
+    blk = min(da.S_BLOCK, max(128, S))
+    pad = (-S) % blk
+    if pad:
+        padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, [(0, 0), (0, pad), (0, 0)])
+            v_scale = jnp.pad(v_scale, [(0, 0), (0, pad), (0, 0)])
+    return da.flash_gqa_decode_call(q, k, v, pos, k_scale, v_scale,
+                                    s_block=blk, interpret=INTERPRET)

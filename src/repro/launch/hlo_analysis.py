@@ -1,0 +1,107 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting.
+
+``cost_analysis()`` does not expose collective bytes, and while-loop
+(scan) bodies are counted once regardless of trip count.  This module
+parses ``compiled.as_text()``:
+
+  1. split the module into named computations;
+  2. sum the operand bytes of every collective op per computation;
+  3. walk the call graph from ENTRY, multiplying through ``while`` ops by
+     their trip count.  Our lowered step functions contain exactly one
+     layer-level scan (trip count = cfg.n_periods, passed in by the
+     caller); sequence-level scans are collective-free by construction
+     (DESIGN.md §4) — asserted here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_CALL_RE = re.compile(r"(?:body|condition|to_apply|branch_computations)="
+                      r"{?%?([\w\.\-, %]+)}?")
+_WHILE_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+while\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_kind_bytes: dict
+    per_computation: dict
+    total_bytes: float
+    scan_multiplied: bool
+
+
+def analyze_collectives(hlo_text: str, scan_trip_count: int = 1,
+                        entry_only: bool = False) -> CollectiveStats:
+    """Sum collective operand bytes.  Collectives found inside non-entry
+    computations that are while-bodies get multiplied by
+    ``scan_trip_count`` (the layer scan)."""
+    comp = None
+    entry = None
+    per_comp = defaultdict(lambda: defaultdict(float))
+    comp_has_while = defaultdict(list)   # comp -> called bodies
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            comp = m.group(1)
+            if line.lstrip().startswith("ENTRY"):
+                entry = comp
+            continue
+        if comp is None:
+            continue
+        if _WHILE_RE.search(line):
+            cm = re.search(r"body=%?([\w\.\-]+)", line)
+            if cm:
+                comp_has_while[comp].append(cm.group(1))
+        m = _COLL_RE.search(line)
+        if m:
+            shape = m.group(1) or m.group(2)
+            kind = m.group(3)
+            per_comp[comp][kind] += _shape_bytes(shape)
+
+    # attribute: entry-level collectives count once; collectives inside a
+    # while body called from entry count scan_trip_count times.
+    totals = defaultdict(float)
+    per_computation = {}
+    for c, kinds in per_comp.items():
+        body_of_entry_while = any(
+            c in bodies or any(c.startswith(b) for b in bodies)
+            for bodies in comp_has_while.values())
+        mult = 1 if c == entry else (scan_trip_count if body_of_entry_while
+                                     else 1)
+        per_computation[c] = {k: v * mult for k, v in kinds.items()}
+        for k, v in kinds.items():
+            totals[k] += v * mult
+    total = sum(totals.values())
+    return CollectiveStats(dict(totals), per_computation, total,
+                           scan_trip_count > 1)
+
+
+def collective_summary(hlo_text: str, scan_trip_count: int = 1) -> dict:
+    st = analyze_collectives(hlo_text, scan_trip_count)
+    return {"total_collective_bytes": st.total_bytes,
+            "per_kind_bytes": st.per_kind_bytes}

@@ -1,0 +1,3 @@
+from repro.models.model import (init_params, train_loss, prefill, forward_logits,
+                                extend_step, decode_step, init_cache,
+                                param_count)

@@ -1,0 +1,346 @@
+"""Attention: GQA (full / sliding-window), MLA (DeepSeek-V2), cross-attn.
+
+Full-sequence attention (train / prefill) is computed flash-style — a
+``lax.scan`` over query chunks with masked softmax against the full K/V —
+so that no (S, S) score tensor is ever materialised (required for the
+32k-prefill dry-run shapes).  Decode reads/writes a KV cache; sliding-window
+archs use a ring buffer of size W with keys RoPE'd at write time.
+
+Scan discipline (DESIGN.md): no collectives inside these scans — heads are
+sharded over ``model`` and batch over ``data``; all contractions are local.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, split_keys, rope_apply_by_cfg
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Params
+# ----------------------------------------------------------------------
+def init_attn(key, cfg: ModelConfig, cross: bool = False):
+    d, hd, nq, nkv = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    if cfg.is_mla and not cross:
+        rhd, rank, vhd = cfg.rope_head_dim, cfg.kv_lora_rank, cfg.v_hd
+        ks = split_keys(key, 6)
+        return {
+            "w_q": dense_init(ks[0], (d, nq, hd + rhd), d),
+            "w_dkv": dense_init(ks[1], (d, rank), d),
+            "w_krope": dense_init(ks[2], (d, rhd), d),
+            "w_uk": dense_init(ks[3], (rank, nq, hd), rank),
+            "w_uv": dense_init(ks[4], (rank, nq, vhd), rank),
+            "w_o": dense_init(ks[5], (nq, vhd, d), nq * vhd),
+        }
+    ks = split_keys(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (d, nq, hd), d),
+        "w_k": dense_init(ks[1], (d, nkv, hd), d),
+        "w_v": dense_init(ks[2], (d, nkv, hd), d),
+        "w_o": dense_init(ks[3], (nq, hd, d), nq * hd),
+    }
+    if cfg.qkv_bias and not cross:
+        p["b_q"] = jnp.zeros((nq, hd), jnp.float32)
+        p["b_k"] = jnp.zeros((nkv, hd), jnp.float32)
+        p["b_v"] = jnp.zeros((nkv, hd), jnp.float32)
+    return p
+
+
+# ----------------------------------------------------------------------
+# Flash-style masked attention over full sequences
+# ----------------------------------------------------------------------
+def _pick_chunk(S: int, target: int = 512) -> int:
+    import os
+    if os.environ.get("REPRO_UNROLL_FOR_COST") == "1":
+        return S          # trip-1 scan: exact cost_analysis accounting
+    if S <= target:
+        return S
+    c = target
+    while S % c:
+        c //= 2
+    return max(c, 1)
+
+
+def masked_attention(q, k, v, q_pos, k_pos, causal: bool, window: int = 0,
+                     k_valid=None):
+    """q: (B, S, nq, hd) — k/v: (B, Sk, nkv, hd[v]).  Positions are absolute.
+    Returns (B, S, nq, hdv).  Scans over query chunks."""
+    B, S, nq, hd = q.shape
+    _, Sk, nkv, hdv = v.shape
+    qpk = nq // nkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(B, S, nkv, qpk, hd)
+    C = _pick_chunk(S)
+    n_chunks = S // C
+
+    def chunk(carry, xs):
+        qc, qp = xs                                   # (B, C, nkv, qpk, hd), (B, C)
+        s = jnp.einsum("bckgh,bskh->bkgcs", qc.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))         # (B, nkv, qpk, C, Sk)
+        mask = jnp.ones((B, 1, 1, C, Sk), jnp.bool_)
+        if causal:
+            rel = qp[:, None, None, :, None] >= k_pos[:, None, None, None, :]
+            mask = mask & rel
+        if window:
+            near = (qp[:, None, None, :, None]
+                    - k_pos[:, None, None, None, :]) < window
+            mask = mask & near
+        if k_valid is not None:
+            mask = mask & k_valid[:, None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgcs,bskh->bckgh", p, v.astype(jnp.float32))
+        return carry, o.astype(q.dtype)
+
+    xs = (qg.reshape(B, n_chunks, C, nkv, qpk, hd).swapaxes(0, 1),
+          q_pos.reshape(B, n_chunks, C).swapaxes(0, 1))
+    # checkpoint each q-chunk: the backward recomputes that chunk's scores
+    # instead of saving (C, Sk) probabilities for every chunk (§Perf H2b)
+    _, outs = jax.lax.scan(jax.checkpoint(chunk), 0, xs)
+    out = outs.swapaxes(0, 1).reshape(B, S, nkv, qpk, hdv)
+    return out.reshape(B, S, nq, hdv)
+
+
+# ----------------------------------------------------------------------
+# GQA forward
+# ----------------------------------------------------------------------
+def _qkv(cfg, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["w_q"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["w_v"].astype(dt))
+    if "b_q" in p:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    q = rope_apply_by_cfg(cfg, q, positions)
+    k = rope_apply_by_cfg(cfg, k, positions)
+    return q, k, v
+
+
+def attn_full(cfg: ModelConfig, p, x, positions):
+    """Train path: full sequence, causal (+window), no cache returned."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    window = cfg.sliding_window if cfg.attention == "sliding" else 0
+    o = masked_attention(q, k, v, pos2d, pos2d, causal=True, window=window)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["w_o"].astype(x.dtype))
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
+    Sc = min(seq, cfg.sliding_window) if cfg.attention == "sliding" else seq
+    shp = (batch, Sc, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.is_mla:
+        return {"latent": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, seq, cfg.rope_head_dim), dtype)}
+    if cfg.kv_cache_dtype == "int8":
+        # beyond-paper: int8 KV + per-(position, head) scales — halves
+        # cache HBM capacity/traffic; kernels/decode_attention dequantises
+        # per tile in VMEM on TPU.
+        return {"k": jnp.zeros(shp, jnp.int8),
+                "v": jnp.zeros(shp, jnp.int8),
+                "k_scale": jnp.zeros(shp[:3], jnp.float32),
+                "v_scale": jnp.zeros(shp[:3], jnp.float32)}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def _quantize_heads(x):
+    """x: (B, L, nkv, hd) -> (int8, scale (B, L, nkv))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attn_prefill(cfg: ModelConfig, p, x, positions):
+    """Prefill: causal attention over the prompt + build the decode cache."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    window = cfg.sliding_window if cfg.attention == "sliding" else 0
+    o = masked_attention(q, k, v, pos2d, pos2d, causal=True, window=window)
+    out = jnp.einsum("bsnh,nhd->bsd", o, p["w_o"].astype(x.dtype))
+    B, S = x.shape[:2]
+    if window and S > window:
+        # ring buffer holding the last W roped keys at slot pos % W
+        W = window
+        last_pos = pos2d[:, -W:]                       # (B, W) absolute
+        slots = last_pos % W
+        kw = k[:, -W:]
+        vw = v[:, -W:]
+        ks = jnp.zeros_like(kw)
+        vs = jnp.zeros_like(vw)
+        bidx = jnp.arange(B)[:, None]
+        ks = ks.at[bidx, slots].set(kw)
+        vs = vs.at[bidx, slots].set(vw)
+        cache = {"k": ks, "v": vs}
+    else:
+        cache = {"k": k, "v": v}
+    if cfg.kv_cache_dtype == "int8":
+        k8, ksc = _quantize_heads(cache["k"])
+        v8, vsc = _quantize_heads(cache["v"])
+        cache = {"k": k8, "v": v8, "k_scale": ksc, "v_scale": vsc}
+    return out, cache
+
+
+def attn_extend(cfg: ModelConfig, p, x, positions, cache, pos):
+    """Extend: attend L new tokens (x: (B, L, d)) against cache + selves.
+    ``pos``: (B,) absolute index of the FIRST new token.  Single-token
+    decode is L=1; speculative-decoding verification is L = draft length.
+    Returns (out (B, L, d), updated cache)."""
+    dt = x.dtype
+    q, k, v = _qkv(cfg, p, x, positions)
+    B, L = x.shape[:2]
+    Sc = cache["k"].shape[1]
+    window = cfg.sliding_window if cfg.attention == "sliding" else 0
+    abs_new = pos[:, None] + jnp.arange(L)[None, :]     # (B, L)
+    slot = abs_new % Sc if window else abs_new
+    bidx = jnp.arange(B)[:, None]
+    int8_cache = cache["k"].dtype == jnp.int8
+    new_cache = {}
+    if int8_cache:
+        k8, ks = _quantize_heads(k)
+        v8, vs = _quantize_heads(v)
+        ck8 = cache["k"].at[bidx, slot].set(k8)
+        cv8 = cache["v"].at[bidx, slot].set(v8)
+        cks = cache["k_scale"].at[bidx, slot].set(ks)
+        cvs = cache["v_scale"].at[bidx, slot].set(vs)
+        new_cache = {"k": ck8, "v": cv8, "k_scale": cks, "v_scale": cvs}
+        ck = ck8.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
+        cv = cv8.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
+    else:
+        ck = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+        new_cache = None
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qpk = nq // nkv
+    qg = q.reshape(B, L, nkv, qpk, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # bf16 contraction with fp32 accumulation: never materialise an fp32
+    # copy of the cache (2x cache bytes of temp otherwise) — §Perf H1c
+    s = jnp.einsum("blkgh,bskh->bkgls",
+                   (qg.astype(jnp.float32) * scale).astype(ck.dtype), ck,
+                   preferred_element_type=jnp.float32)  # (B,nkv,qpk,L,Sc)
+    slot_idx = jnp.arange(Sc)[None, :]                  # (1, Sc)
+    if window:
+        W = Sc
+        last = abs_new[:, -1:]                          # (B,1)
+        slot_abs = last - ((last - slot_idx) % W)       # (B, Sc) abs pos
+    else:
+        slot_abs = jnp.broadcast_to(slot_idx, (B, Sc))
+    # causal vs each of the L queries + window lower bound + occupancy
+    qpos = abs_new[:, None, None, :, None]              # (B,1,1,L,1)
+    kpos = slot_abs[:, None, None, None, :]             # (B,1,1,1,Sc)
+    valid = kpos <= qpos
+    if window:
+        valid &= kpos > qpos - window
+        valid &= kpos >= 0
+    s = jnp.where(valid, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgls,bskh->blkgh", prob.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, L, nq, hd).astype(dt)
+    out = jnp.einsum("bsnh,nhd->bsd", o, p["w_o"].astype(dt))
+    if new_cache is not None:
+        return out, new_cache
+    return out, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ----------------------------------------------------------------------
+def _mla_q(cfg, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["w_q"].astype(dt))
+    q_nope, q_rope = jnp.split(q, [cfg.head_dim], axis=-1)
+    q_rope = rope_apply_by_cfg(cfg, q_rope, positions)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, x, positions):
+    dt = x.dtype
+    latent = x @ p["w_dkv"].astype(dt)                       # (B, S, rank)
+    k_rope = (x @ p["w_krope"].astype(dt))[:, :, None, :]    # (B, S, 1, rhd)
+    k_rope = rope_apply_by_cfg(cfg, k_rope, positions)[:, :, 0]
+    return latent, k_rope
+
+
+def mla_full(cfg: ModelConfig, p, x, positions, return_cache: bool = False):
+    """Train/prefill: expand latent to per-head K/V, flash-scan attention."""
+    dt = x.dtype
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rnh->bsnh", latent, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rnh->bsnh", latent, p["w_uv"].astype(dt))
+    nq = cfg.n_heads
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                k_rope.shape[:2] + (nq, cfg.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    pos2d = positions if positions.ndim == 2 else positions[0]
+    o = masked_attention(q, k, v, pos2d, pos2d, causal=True)
+    out = jnp.einsum("bsnh,nhd->bsd", o, p["w_o"].astype(dt))
+    if return_cache:
+        return out, {"latent": latent, "k_rope": k_rope}
+    return out
+
+
+def mla_extend(cfg: ModelConfig, p, x, positions, cache, pos):
+    """Absorbed MLA extend (decode L=1 / verify L>1): scores and context
+    live in latent space — per-step cost O(S·rank) not O(S·H·hd)."""
+    dt = x.dtype
+    B, L = x.shape[:2]
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)            # (B,L,H,·)
+    latent_t, k_rope_t = _mla_latent(cfg, p, x, positions)   # (B,L,rank)
+    abs_new = pos[:, None] + jnp.arange(L)[None, :]          # (B, L)
+    bidx = jnp.arange(B)[:, None]
+    clat = cache["latent"].at[bidx, abs_new].set(
+        latent_t.astype(cache["latent"].dtype))
+    crope = cache["k_rope"].at[bidx, abs_new].set(
+        k_rope_t.astype(cache["k_rope"].dtype))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim + cfg.rope_head_dim,
+                                       jnp.float32))
+    # absorb W_uk into the query
+    q_lat = jnp.einsum("blnh,rnh->blnr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))        # (B,L,H,rank)
+    s = jnp.einsum("blnr,bsr->bnls", q_lat.astype(clat.dtype), clat,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("blnh,bsh->bnls", q_rope.astype(crope.dtype), crope,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    Sc = clat.shape[1]
+    valid = (jnp.arange(Sc)[None, None, :]
+             <= abs_new[:, :, None])[:, None]                # (B,1,L,Sc)
+    s = jnp.where(valid, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bnls,bsr->blnr", prob.astype(clat.dtype), clat,
+                         preferred_element_type=jnp.float32)
+    o = jnp.einsum("blnr,rnh->blnh", ctx_lat, p["w_uv"].astype(jnp.float32))
+    out = jnp.einsum("blnh,nhd->bld", o.astype(dt), p["w_o"].astype(dt))
+    return out, {"latent": clat, "k_rope": crope}
+
+
+# ----------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ----------------------------------------------------------------------
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, p["w_v"].astype(dt))
+    return {"k": k, "v": v}
+
+
+def cross_attend(cfg: ModelConfig, p, x, kv, enc_valid=None):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["w_q"].astype(dt))
+    B, S = x.shape[:2]
+    Sk = kv["k"].shape[1]
+    qpos = jnp.zeros((B, S), jnp.int32)
+    kpos = jnp.zeros((B, Sk), jnp.int32)
+    o = masked_attention(q, kv["k"], kv["v"], qpos, kpos, causal=False,
+                         k_valid=enc_valid)
+    return jnp.einsum("bsnh,nhd->bsd", o, p["w_o"].astype(dt))

@@ -1,0 +1,52 @@
+"""Encoder stack for encoder-decoder models (SeamlessM4T backbone).
+
+The encoder consumes *precomputed frame embeddings* from the (stubbed)
+audio frontend — DESIGN.md carve-out — and runs bidirectional attention.
+Decoder-side cross-attention lives in ``transformer.apply_block``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import init_mlp, mlp_apply, rmsnorm, split_keys
+
+
+def init_encoder(key, cfg: ModelConfig):
+    n = cfg.n_encoder_layers
+    keys = jax.random.split(key, n)
+
+    def one(k):
+        ks = split_keys(k, 2)
+        return {
+            "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": attn.init_attn(ks[0], cfg, cross=True),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+
+    return jax.vmap(one)(jnp.stack(keys))
+
+
+def encode(cfg: ModelConfig, enc_p, embeds, valid=None):
+    """embeds: (B, S_enc, d) from the frontend stub.  Bidirectional."""
+    B, S, _ = embeds.shape
+    pos = jnp.zeros((B, S), jnp.int32)
+
+    def layer(x, p):
+        h = rmsnorm(x, p["norm1"], cfg.rms_eps)
+        dt = x.dtype
+        q = jnp.einsum("bsd,dnh->bsnh", h, p["attn"]["w_q"].astype(dt))
+        k = jnp.einsum("bsd,dnh->bsnh", h, p["attn"]["w_k"].astype(dt))
+        v = jnp.einsum("bsd,dnh->bsnh", h, p["attn"]["w_v"].astype(dt))
+        o = attn.masked_attention(q, k, v, pos, pos, causal=False,
+                                  k_valid=valid)
+        x = x + jnp.einsum("bsnh,nhd->bsd", o, p["attn"]["w_o"].astype(dt))
+        h2 = rmsnorm(x, p["norm2"], cfg.rms_eps)
+        x = x + mlp_apply(p["mlp"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, embeds, enc_p)
+    return x

@@ -1,0 +1,38 @@
+"""Modality frontend stubs (DESIGN.md carve-out).
+
+The assignment specifies that [audio]/[vlm] entries cover the transformer
+BACKBONE only; the mel-spectrogram + conv feature extractor (audio) and the
+ViT/SigLIP encoder + projector (vision) are stubs that emit embeddings of
+the correct shape.  These helpers produce deterministic pseudo-embeddings
+for examples/tests and ``ShapeDtypeStruct`` specs for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frame_embeds(key, batch: int, n_frames: int, d_model: int,
+                       dtype=jnp.float32):
+    """Stand-in for mel-spectrogram -> conv feature extractor output."""
+    return jax.random.normal(key, (batch, n_frames, d_model), dtype) * 0.02
+
+
+def vision_patch_positions(batch: int, n_patches: int, grid_h: int,
+                           grid_w: int):
+    """M-RoPE 3D position ids for a (grid_h x grid_w) patch grid followed
+    by text.  Returns (3, batch, n_patches) int32 (t, h, w)."""
+    idx = jnp.arange(n_patches)
+    t = jnp.zeros_like(idx)
+    h = (idx // grid_w) % grid_h
+    w = idx % grid_w
+    pos = jnp.stack([t, h, w])                      # (3, n_patches)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, n_patches))
+
+
+def mrope_text_positions(batch: int, seq: int, start: int = 0):
+    p = start + jnp.arange(seq)
+    p = jnp.broadcast_to(p[None], (batch, seq))
+    return jnp.broadcast_to(p[None], (3, batch, seq))

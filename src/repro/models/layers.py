@@ -1,0 +1,130 @@
+"""Shared layer primitives: RMSNorm, RoPE / M-RoPE, SwiGLU MLP, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+def dense_init(key, shape, in_axis_size, scale: float = 1.0):
+    std = scale / jnp.sqrt(jnp.asarray(in_axis_size, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(jnp.float32)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ----------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    ang = ang[..., None, :]                             # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float):
+    """Multimodal RoPE (Qwen2-VL). positions3: (3, ..., S) — (t, h, w) ids.
+    ``sections`` partitions the hd/2 frequency axis among the 3 id streams."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)                        # (half,)
+    # build per-frequency position source
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)        # (half,)
+    pos = positions3.astype(jnp.float32)                 # (3, ..., S)
+    pos_per_freq = jnp.take(pos, sec_id, axis=0)         # (half, ..., S) ??
+    # jnp.take along axis 0 yields (half, ..., S); move to (..., S, half)
+    pos_per_freq = jnp.moveaxis(pos_per_freq, 0, -1)     # (..., S, half)
+    ang = pos_per_freq * freqs                           # (..., S, half)
+    ang = ang[..., None, :]                              # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_apply_by_cfg(cfg: ModelConfig, x, positions):
+    """positions: (B, S) for rope, (3, B, S) for mrope."""
+    if cfg.rope_type == "none":
+        return x
+    if cfg.rope_type == "mrope":
+        if positions.ndim == 2:                 # text-only: t == h == w
+            positions = jnp.broadcast_to(positions[None],
+                                         (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), d_model),
+        "w_up": dense_init(k2, (d_model, d_ff), d_model),
+        "w_down": dense_init(k3, (d_ff, d_model), d_ff),
+    }
+
+
+def mlp_apply(p, x):
+    dt = x.dtype
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u) @ \
+        p["w_down"].astype(dt)
+
+
+# ----------------------------------------------------------------------
+# Embedding / LM head
+# ----------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig):
+    k1, k2 = split_keys(key, 2)
+    p = {"embedding": dense_init(k1, (cfg.vocab, cfg.d_model), cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab), cfg.d_model)
+    return p
+
+
+def embed_apply(p, tokens, dtype):
+    return jnp.take(p["embedding"].astype(dtype), tokens, axis=0)
+
+
+def lm_head_apply(p, x, tied: bool):
+    dt = x.dtype
+    if tied:
+        return x @ p["embedding"].astype(dt).T
+    return x @ p["lm_head"].astype(dt)

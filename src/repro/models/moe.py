@@ -1,0 +1,196 @@
+"""Mixture-of-Experts channel mixer.
+
+Dispatch uses the *permute* formulation (MaxText/GShard lineage, adapted so
+XLA SPMD shards experts over the ``model`` axis):
+
+  1. router softmax → top-k (gate, expert) per token;
+  2. position-in-expert via a one-hot cumulative sum over the flattened
+     token·k axis (capacity C = ceil(T·k·cf / E); overflow tokens drop —
+     their gate mass is re-normalised away, standard capacity-factor MoE);
+  3. scatter tokens into an (E, C, D) buffer, batched expert SwiGLU
+     matmuls (E, C, D)x(E, D, F), gather back with gate weighting.
+
+Shared experts (Qwen-MoE / DeepSeek-V2) run densely on every token.
+The router aux loss (load-balance, Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, split_keys, init_mlp, mlp_apply
+
+
+def init_moe(key, cfg: ModelConfig):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), d),
+        "w_gate": dense_init(ks[1], (E, d, f), d),
+        "w_up": dense_init(ks[2], (E, d, f), d),
+        "w_down": dense_init(ks[3], (E, f, d), f),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * f)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.moe_top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)          # round up to 8
+
+
+# dispatch groups: set to the data-parallel degree by the launcher so
+# position-in-expert bookkeeping (cumsum) and the (E, C, D) buffers stay
+# LOCAL to each data shard — without it XLA all-gathers the token stream
+# to build a global dispatch buffer (§Perf H3).  1 = single-device.
+GROUPS = 1
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Distributed path (§Perf H3b): GSPMD cannot partition the batched
+    dispatch scatter (it all-gathers the token stream: 40 GiB/layer on
+    qwen2-moe prefill), so under a mesh the layer drops into shard_map —
+    per-data-shard dispatch with LOCAL capacity (GShard group semantics)
+    and one megatron psum over ``model`` after the expert down-proj."""
+    from repro.sharding import act_sharding
+    if act_sharding.MESH is not None and GROUPS > 1:
+        dp_size = 1
+        axes = act_sharding.AXES
+        dp = axes.dp if isinstance(axes.dp, tuple) else (axes.dp,)
+        for a in dp:
+            dp_size *= act_sharding.MESH.shape[a]
+        # shard_map needs the batch divisible by the dp degree; tiny
+        # decode batches (long_500k B=1) take the GSPMD path instead
+        if x.shape[0] % dp_size == 0:
+            return _moe_shard_map(cfg, p, x)
+    B, S, D = x.shape
+    y, aux = _moe_tokens(cfg, p, x.reshape(B * S, D))
+    return y.reshape(B, S, D), aux
+
+
+def _moe_shard_map(cfg: ModelConfig, p, x):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import act_sharding
+    mesh, axes = act_sharding.MESH, act_sharding.AXES
+    M = mesh.shape[axes.model]
+    e_sharded = cfg.n_experts % M == 0
+    dp = axes.dp
+    B, S, D = x.shape
+
+    def pspec(name, ndim):
+        if name == "router":
+            return P(*([None] * ndim))
+        if name in ("w_gate", "w_up"):
+            return P("model" if e_sharded else None, None,
+                     None if e_sharded else "model")
+        if name == "w_down":
+            return P("model", None, None) if e_sharded \
+                else P(None, "model", None)
+        return P(None, "model") if name in ("w_gate2",) else None
+
+    in_specs = (
+        P(dp, None, None),                                   # x
+        {
+            "router": P(None, None),
+            "w_gate": pspec("w_gate", 3),
+            "w_up": pspec("w_up", 3),
+            "w_down": pspec("w_down", 3),
+            **({"shared": {"w_gate": P(None, "model"),
+                           "w_up": P(None, "model"),
+                           "w_down": P("model", None)}}
+               if "shared" in p else {}),
+        },
+    )
+
+    def local_fn(xl, pl):
+        Bl, Sl, Dl = xl.shape
+        xf = xl.reshape(Bl * Sl, Dl)
+        y, aux = _moe_tokens(cfg, pl, xf, expert_offset_axis=axes.model
+                             if e_sharded else None)
+        # partial contributions: experts (e_sharded) or FFN slices — one
+        # all-reduce over the model axis either way
+        y = jax.lax.psum(y, axes.model)
+        aux = jax.lax.pmean(aux, axes.model)
+        for a in (dp if isinstance(dp, tuple) else (dp,)):
+            aux = jax.lax.pmean(aux, a)
+        return y.reshape(Bl, Sl, Dl), aux
+
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(dp, None, None), P()))
+    return fn(x, {k: p[k] for k in
+                  ("router", "w_gate", "w_up", "w_down",
+                   *(("shared",) if "shared" in p else ()))})
+
+
+def _moe_tokens(cfg: ModelConfig, p, xf, expert_offset_axis=None):
+    """xf: (T, D) tokens of ONE dispatch group.
+
+    expert_offset_axis: inside shard_map with expert-sharded weights, this
+    names the mesh axis whose index selects the local expert slice; tokens
+    routed to other shards' experts are masked out (their contribution
+    comes from those shards' psum terms)."""
+    dt = xf.dtype
+    T, D = xf.shape
+    k = cfg.moe_top_k
+    E = cfg.n_experts
+    C = capacity(cfg, T)
+
+    logits = (xf.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux load-balance loss (Switch) ---
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_coef
+
+    # --- position in expert over the flattened (T*k,) assignment list ---
+    flat_e = eidx.reshape(-1)                             # (T*k,)
+    local_ok = None
+    if expert_offset_axis is not None:
+        E_loc = p["w_gate"].shape[0]                      # local experts
+        lo = jax.lax.axis_index(expert_offset_axis) * E_loc
+        local_ok = (flat_e >= lo) & (flat_e < lo + E_loc)
+        flat_e = jnp.clip(flat_e - lo, 0, E_loc - 1)
+        E = E_loc
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (T*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot         # pos before this
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    if local_ok is not None:
+        keep = keep & local_ok
+    slot = jnp.where(keep, pos, C)                        # C = overflow bin
+
+    # --- scatter to (E, C+1, D); slot C absorbs dropped tokens ---
+    src = jnp.repeat(xf, k, axis=0)                       # (T*k, D)
+    buf = jnp.zeros((E, C + 1, D), dt)
+    if local_ok is not None:
+        src = src * local_ok[:, None].astype(dt)
+    buf = buf.at[flat_e, slot].add(src.astype(dt))
+
+    # --- batched expert SwiGLU ---
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+    # --- gather back & combine with gates ---
+    out_tok = out_buf[flat_e, slot]                       # (T*k, D)
+    out_tok = out_tok * (gate.reshape(-1, 1).astype(dt)
+                         * keep[:, None].astype(dt))
+    y = out_tok.reshape(T, k, D).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], xf)
+    return y, aux

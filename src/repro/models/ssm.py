@@ -1,0 +1,393 @@
+"""State-space / recurrent sequence mixers: Mamba, mLSTM, sLSTM.
+
+TPU adaptation notes (DESIGN.md §3):
+- Mamba's selective scan runs as a chunked ``lax.scan`` over the sequence
+  (carry = (B, d_inner, d_state) state) with a work-efficient
+  ``associative_scan`` inside each chunk — bounds the transient to
+  (B, CHUNK, d_inner, d_state) so 4k/32k shapes fit VMEM-era HBM budgets.
+- mLSTM uses the quadratic parallel form for training (decay-masked
+  attention — MXU friendly) and the recurrent matrix-memory form for
+  prefill/decode.
+- sLSTM is inherently sequential (true to the paper): ``lax.scan`` with
+  block-diagonal per-head recurrence.  No collectives live inside any of
+  these scans (heads/channels are sharded over ``model``; scans run over
+  time).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, split_keys, rmsnorm
+
+MAMBA_CHUNK = 256
+
+
+# ======================================================================
+# Mamba
+# ======================================================================
+def init_mamba(key, cfg: ModelConfig):
+    d, di, ds, dtr = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank
+    ks = split_keys(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), d),
+        "conv_w": dense_init(ks[1], (cfg.mamba_d_conv, di), cfg.mamba_d_conv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), di),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtr),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus ~ 0.01
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), di),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv along S.  x: (B, S, di), w: (K, di).
+    state: (B, K-1, di) trailing context (decode) or None (zeros)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)             # (B, S+K-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return out + b.astype(x.dtype), new_state
+
+
+def _ssm_inputs(cfg, p, xc):
+    """xc: post-conv activations (B, S, di) -> (A_bar, Bx, C) per step."""
+    dt32 = jnp.float32
+    ds = cfg.mamba_d_state
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt_raw, B_ssm, C_ssm = jnp.split(
+        proj.astype(dt32), [cfg.dt_rank, cfg.dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                    # (di, ds)
+    A_bar = jnp.exp(dt[..., None] * A)                          # (B,S,di,ds)
+    Bx = (dt * xc.astype(dt32))[..., None] * B_ssm[..., None, :]
+    return A_bar, Bx, C_ssm
+
+
+def _scan_chunked(A_bar, Bx, h0):
+    """h_t = A_t * h_{t-1} + b_t over axis 1, chunked.  Returns (h_all, h_T).
+    A_bar/Bx: (B, S, di, ds); h0: (B, di, ds)."""
+    B, S, di, ds = A_bar.shape
+    import os
+    C = S if os.environ.get("REPRO_UNROLL_FOR_COST") == "1" \
+        else min(MAMBA_CHUNK, S)
+    while S % C:
+        C //= 2
+    n = S // C
+
+    def binop(a, b):
+        (Aa, ba), (Ab, bb) = a, b
+        return Aa * Ab, Ab * ba + bb
+
+    def chunk(h_prev, xs):
+        Ac, bc = xs                                # (B, C, di, ds)
+        Acum, hloc = jax.lax.associative_scan(binop, (Ac, bc), axis=1)
+        h = hloc + Acum * h_prev[:, None]
+        return h[:, -1], h
+
+    xs = (A_bar.reshape(B, n, C, di, ds).swapaxes(0, 1),
+          Bx.reshape(B, n, C, di, ds).swapaxes(0, 1))
+    hT, hs = jax.lax.scan(chunk, h0, xs)
+    return hs.swapaxes(0, 1).reshape(B, S, di, ds), hT
+
+
+def mamba_seq(cfg: ModelConfig, p, x, state=None, return_state=False,
+              collect_traj=False):
+    """Full-sequence mamba. x: (B, S, d).  state: decode-style carry dict
+    {"conv": (B,K-1,di), "ssm": (B,di,ds)} or None.  With collect_traj the
+    per-position states are returned (speculative-decoding rollback)."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    di, ds = cfg.d_inner, cfg.mamba_d_state
+    K = cfg.mamba_d_conv
+    xz = x @ p["in_proj"].astype(dt)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    if state is None:
+        conv_state = jnp.zeros((B, K - 1, di), x1.dtype)
+    else:
+        conv_state = state["conv"].astype(x1.dtype)
+    xc, new_conv = _causal_conv(x1, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+    A_bar, Bx, C_ssm = _ssm_inputs(cfg, p, xc)
+    h0 = state["ssm"] if state else jnp.zeros((B, di, ds), jnp.float32)
+    hs, hT = _scan_chunked(A_bar, Bx, h0.astype(jnp.float32))
+    y = (hs * C_ssm[:, :, None, :]).sum(-1)             # (B,S,di)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt)
+    out = y @ p["out_proj"].astype(dt)
+    if not return_state:
+        return out
+    if not collect_traj:
+        return out, {"conv": new_conv, "ssm": hT}
+    # conv window AFTER step t = rows (t+1)..(t+K-1) of [conv_state; x1]
+    xp = jnp.concatenate([conv_state, x1], axis=1)      # (B, S+K-1, di)
+    idx = jnp.arange(S)[:, None] + 1 + jnp.arange(K - 1)[None, :]
+    conv_traj = xp[:, idx]                              # (B, S, K-1, di)
+    return out, {"conv": new_conv, "ssm": hT}, \
+        {"conv": conv_traj, "ssm": hs}
+
+
+def mamba_step(cfg: ModelConfig, p, x, state):
+    """Single decode step.  x: (B, 1, d)."""
+    dt = x.dtype
+    B = x.shape[0]
+    xz = x @ p["in_proj"].astype(dt)
+    x1, z = jnp.split(xz, 2, axis=-1)                   # (B,1,di)
+    xc, new_conv = _causal_conv(x1, p["conv_w"], p["conv_b"], state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+    A_bar, Bx, C_ssm = _ssm_inputs(cfg, p, xc)          # (B,1,di,ds)
+    h = A_bar[:, 0] * state["ssm"] + Bx[:, 0]           # (B,di,ds)
+    y = (h * C_ssm[:, 0, None, :]).sum(-1)              # (B,di)
+    y = y + p["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(dt)
+    out = (y @ p["out_proj"].astype(dt))[:, None]
+    return out, {"conv": new_conv, "ssm": h}
+
+
+def make_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    return {"conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner),
+                              dtype),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state),
+                             jnp.float32)}
+
+
+# ======================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ======================================================================
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    ks = split_keys(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * di), d),
+        "w_q": dense_init(ks[1], (nh, dh, dh), dh),
+        "w_k": dense_init(ks[2], (nh, dh, dh), dh),
+        "w_v": dense_init(ks[3], (nh, dh, dh), dh),
+        "w_i": dense_init(ks[4], (di, nh), di),
+        "w_f": dense_init(ks[5], (di, nh), di),
+        "b_i": jnp.zeros((nh,), jnp.float32),
+        "b_f": jnp.full((nh,), 3.0, jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "down_proj": dense_init(ks[6], (di, d), di),
+    }
+
+
+def _mlstm_qkvif(cfg, p, xm):
+    """xm: (B, S, di) -> q,k,v (B,S,nh,dh) + log-gates (B,S,nh) fp32."""
+    dt = xm.dtype
+    B, S, di = xm.shape
+    nh = cfg.n_heads
+    dh = di // nh
+    xh = xm.reshape(B, S, nh, dh)
+    q = jnp.einsum("bsnh,nhg->bsng", xh, p["w_q"].astype(dt))
+    k = jnp.einsum("bsnh,nhg->bsng", xh, p["w_k"].astype(dt))
+    k = k / jnp.sqrt(jnp.asarray(dh, k.dtype))
+    v = jnp.einsum("bsnh,nhg->bsng", xh, p["w_v"].astype(dt))
+    logi = (xm.astype(jnp.float32) @ p["w_i"] + p["b_i"])
+    logf = jax.nn.log_sigmoid(xm.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+    return q, k, v, logi, logf
+
+
+def mlstm_parallel(cfg: ModelConfig, p, x):
+    """Quadratic parallel form (training)."""
+    dt = x.dtype
+    B, S, d = x.shape
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    up = x @ p["up_proj"].astype(dt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logi, logf = _mlstm_qkvif(cfg, p, xm)
+    F = jnp.cumsum(logf, axis=1)                        # (B,S,nh)
+    # D[b,n,i,j] = F_i - F_j + logi_j   (j <= i)
+    Dm = (F[:, :, None, :] - F[:, None, :, :]
+          + logi[:, None, :, :])                        # (B,S,S,nh) i,j idx
+    Dm = jnp.moveaxis(Dm, -1, 1)                        # (B,nh,S,S)
+    causal = jnp.tril(jnp.ones((S, S), jnp.bool_))
+    Dm = jnp.where(causal, Dm, -jnp.inf)
+    m = jnp.max(Dm, axis=-1, keepdims=True)             # (B,nh,S,1)
+    Dexp = jnp.exp(Dm - m)
+    logits = jnp.einsum("bing,bjng->bnij", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    Smat = logits * Dexp                                # (B,nh,S,S)
+    n = jnp.maximum(jnp.abs(Smat.sum(-1, keepdims=True)),
+                    jnp.exp(-m))
+    h = jnp.einsum("bnij,bjng->bing", Smat / n, v.astype(jnp.float32))
+    h = h.reshape(B, S, di).astype(dt)
+    h = rmsnorm(h, p["norm_w"], cfg.rms_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return h @ p["down_proj"].astype(dt)
+
+
+def _mlstm_step_core(q, k, v, logi, logf, state):
+    """One recurrent step.  q,k,v: (B,nh,dh); gates (B,nh).  state:
+    dict(C (B,nh,dh,dh), n (B,nh,dh), m (B,nh)).  Returns h (B,nh,dh)."""
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(logf + m_prev, logi)
+    i_p = jnp.exp(logi - m_new)[..., None]              # (B,nh,1)
+    f_p = jnp.exp(logf + m_prev - m_new)[..., None]
+    C = f_p[..., None] * C_prev + i_p[..., None] * \
+        (v[..., :, None] * k[..., None, :])             # (B,nh,dh,dh)
+    n = f_p * n_prev + i_p * k
+    num = jnp.einsum("bngh,bnh->bng", C, q)             # C @ q over k-dim
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnh,bnh->bn", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_seq_recurrent(cfg: ModelConfig, p, x, state=None,
+                        return_state=False, collect_traj=False):
+    """Recurrent form over a sequence (prefill / extend)."""
+    dt = x.dtype
+    B, S, d = x.shape
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    up = x @ p["up_proj"].astype(dt)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logi, logf = _mlstm_qkvif(cfg, p, xm)
+    if state is None:
+        state = make_mlstm_state(cfg, B)
+    qf, kf, vf = (a.astype(jnp.float32).swapaxes(0, 1) for a in (q, k, v))
+    logi_s, logf_s = logi.swapaxes(0, 1), logf.swapaxes(0, 1)
+
+    def step(st, xs):
+        qt, kt, vt, it, ft = xs
+        h, st = _mlstm_step_core(qt, kt, vt, it, ft, st)
+        return st, ((h, st) if collect_traj else h)
+
+    stT, ys = jax.lax.scan(step, state, (qf, kf, vf, logi_s, logf_s))
+    hs = ys[0] if collect_traj else ys
+    h = hs.swapaxes(0, 1).reshape(B, S, di).astype(dt)
+    h = rmsnorm(h, p["norm_w"], cfg.rms_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    out = h @ p["down_proj"].astype(dt)
+    if not return_state:
+        return out
+    if not collect_traj:
+        return out, stT
+    traj = jax.tree.map(lambda a: a.swapaxes(0, 1), ys[1])  # (B,S,...)
+    return out, stT, traj
+
+
+def mlstm_step(cfg: ModelConfig, p, x, state):
+    dt = x.dtype
+    B = x.shape[0]
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    up = x @ p["up_proj"].astype(dt)                    # (B,1,2di)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v, logi, logf = _mlstm_qkvif(cfg, p, xm)
+    h, st = _mlstm_step_core(q[:, 0].astype(jnp.float32),
+                             k[:, 0].astype(jnp.float32),
+                             v[:, 0].astype(jnp.float32),
+                             logi[:, 0], logf[:, 0], state)
+    h = h.reshape(B, 1, di).astype(dt)
+    h = rmsnorm(h, p["norm_w"], cfg.rms_eps)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    return h @ p["down_proj"].astype(dt), st
+
+
+def make_mlstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+# ======================================================================
+# sLSTM (xLSTM scalar-memory block)
+# ======================================================================
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dff = max(128, int(round(cfg.slstm_proj_factor * d / 128)) * 128)
+    ks = split_keys(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), d),       # i,f,z,o
+        "b_in": jnp.concatenate([jnp.zeros((d,)), jnp.full((d,), 3.0),
+                                 jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "r": dense_init(ks[1], (4, nh, dh, dh), dh),    # block-diag recur
+        "norm_w": jnp.ones((d,), jnp.float32),
+        "ffn_up": dense_init(ks[2], (d, dff), d),
+        "ffn_down": dense_init(ks[3], (dff, d), dff),
+    }
+
+
+def _slstm_step_core(cfg, p, xt, st):
+    """xt: (B, 4d) pre-computed input projection.  st: dict h,c,n,m (B,d)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    B = xt.shape[0]
+    hprev = st["h"].reshape(B, nh, dh)
+    rec = jnp.einsum("bnh,knhg->bkng", hprev, p["r"]).reshape(B, 4 * d)
+    pre = xt + rec + p["b_in"]
+    it, ft, zt, ot = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + st["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + st["m"] - m_new)
+    c = f_p * st["c"] + i_p * jnp.tanh(zt)
+    n = f_p * st["n"] + i_p
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return h, {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_seq(cfg: ModelConfig, p, x, state=None, return_state=False,
+              collect_traj=False):
+    dt = x.dtype
+    B, S, d = x.shape
+    if state is None:
+        state = make_slstm_state(cfg, B)
+    xin = (x @ p["w_in"].astype(dt)).astype(jnp.float32)   # (B,S,4d)
+
+    def step(st, xt):
+        h, st = _slstm_step_core(cfg, p, xt, st)
+        return st, ((h, st) if collect_traj else h)
+
+    stT, ys = jax.lax.scan(step, state, xin.swapaxes(0, 1))
+    hs = ys[0] if collect_traj else ys
+    h = hs.swapaxes(0, 1).astype(dt)                        # (B,S,d)
+    h = rmsnorm(h, p["norm_w"], cfg.rms_eps)
+    ff = jax.nn.gelu((h @ p["ffn_up"].astype(dt)).astype(jnp.float32))
+    out = ff.astype(dt) @ p["ffn_down"].astype(dt)
+    if not return_state:
+        return out
+    if not collect_traj:
+        return out, stT
+    traj = jax.tree.map(lambda a: a.swapaxes(0, 1), ys[1])
+    return out, stT, traj
+
+
+def slstm_step(cfg: ModelConfig, p, x, state):
+    dt = x.dtype
+    xin = (x[:, 0] @ p["w_in"].astype(dt)).astype(jnp.float32)
+    h, st = _slstm_step_core(cfg, p, xin, state)
+    h = h[:, None].astype(dt)
+    h = rmsnorm(h, p["norm_w"], cfg.rms_eps)
+    ff = jax.nn.gelu((h @ p["ffn_up"].astype(dt)).astype(jnp.float32))
+    return ff.astype(dt) @ p["ffn_down"].astype(dt), st
+
+
+def make_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), -1e30,
+                                                  jnp.float32)}

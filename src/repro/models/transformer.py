@@ -1,0 +1,255 @@
+"""Block composition and the scanned layer stack.
+
+A *period* is the repeating unit of ``cfg.block_pattern`` /
+``cfg.ffn_pattern`` (length 1 for homogeneous models, 8 for Jamba/xLSTM).
+Body parameters are stacked across periods and driven by ``jax.lax.scan``
+— the only layer-level while loop in the lowered HLO, with statically
+known trip count ``cfg.n_periods`` (used by the analytic roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import init_mlp, mlp_apply, rmsnorm, split_keys
+
+
+# ----------------------------------------------------------------------
+# Single block
+# ----------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, block_type: str, ffn_type: str,
+               cross: bool = False):
+    ks = split_keys(key, 4)
+    d = cfg.d_model
+    p = {"norm1": jnp.ones((d,), jnp.float32)}
+    if block_type == "attn":
+        p["attn"] = attn.init_attn(ks[0], cfg)
+    elif block_type == "mamba":
+        p["mamba"] = ssm.init_mamba(ks[0], cfg)
+    elif block_type == "mlstm":
+        p["mlstm"] = ssm.init_mlstm(ks[0], cfg)
+    elif block_type == "slstm":
+        p["slstm"] = ssm.init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(block_type)
+    if ffn_type == "mlp":
+        p["norm2"] = jnp.ones((d,), jnp.float32)
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff)
+    elif ffn_type == "moe":
+        p["norm2"] = jnp.ones((d,), jnp.float32)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    if cross:
+        p["norm_x"] = jnp.ones((d,), jnp.float32)
+        p["cross"] = attn.init_attn(ks[2], cfg, cross=True)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, block_type: str, batch: int,
+                     seq: int, dtype):
+    if block_type == "attn":
+        return attn.make_kv_cache(cfg, batch, seq, dtype)
+    if block_type == "mamba":
+        return ssm.make_mamba_state(cfg, batch, dtype)
+    if block_type == "mlstm":
+        return ssm.make_mlstm_state(cfg, batch)
+    if block_type == "slstm":
+        return ssm.make_slstm_state(cfg, batch)
+    raise ValueError(block_type)
+
+
+def apply_block(cfg: ModelConfig, p, x, block_type: str, ffn_type: str, *,
+                mode: str, positions, cache=None, pos=None, enc_out=None,
+                cross_kv=None, enc_valid=None, collect_traj: bool = False):
+    """Returns (x, aux_loss, new_cache, state_traj).
+
+    ``state_traj`` (only when collect_traj and the block carries sequential
+    state) holds the per-position state snapshots used for speculative-
+    decoding rollback; attention blocks return a zero-size placeholder
+    (their KV caches roll back positionally for free)."""
+    h = rmsnorm(x, p["norm1"], cfg.rms_eps)
+    new_cache = None
+    traj = jnp.zeros((0,), jnp.float32)
+    if block_type == "attn":
+        if cfg.is_mla:
+            if mode == "train":
+                a = attn.mla_full(cfg, p["attn"], h, positions)
+            elif mode == "prefill":
+                a, new_cache = attn.mla_full(cfg, p["attn"], h, positions,
+                                             return_cache=True)
+            else:  # extend (decode L=1 / SD-verify L>1)
+                a, new_cache = attn.mla_extend(cfg, p["attn"], h, positions,
+                                               cache, pos)
+        else:
+            if mode == "train":
+                a = attn.attn_full(cfg, p["attn"], h, positions)
+            elif mode == "prefill":
+                a, new_cache = attn.attn_prefill(cfg, p["attn"], h, positions)
+            else:
+                a, new_cache = attn.attn_extend(cfg, p["attn"], h, positions,
+                                                cache, pos)
+    elif block_type == "mamba":
+        if mode == "train":
+            a = ssm.mamba_seq(cfg, p["mamba"], h)
+        elif collect_traj:
+            a, new_cache, traj = ssm.mamba_seq(
+                cfg, p["mamba"], h, state=cache, return_state=True,
+                collect_traj=True)
+        else:
+            a, new_cache = ssm.mamba_seq(
+                cfg, p["mamba"], h, state=cache, return_state=True)
+    elif block_type == "mlstm":
+        if mode == "train":
+            a = ssm.mlstm_parallel(cfg, p["mlstm"], h)
+        elif collect_traj:
+            a, new_cache, traj = ssm.mlstm_seq_recurrent(
+                cfg, p["mlstm"], h, state=cache, return_state=True,
+                collect_traj=True)
+        else:
+            a, new_cache = ssm.mlstm_seq_recurrent(
+                cfg, p["mlstm"], h, state=cache, return_state=True)
+    elif block_type == "slstm":
+        if mode == "train":
+            a = ssm.slstm_seq(cfg, p["slstm"], h)
+        elif collect_traj:
+            a, new_cache, traj = ssm.slstm_seq(
+                cfg, p["slstm"], h, state=cache, return_state=True,
+                collect_traj=True)
+        else:
+            a, new_cache = ssm.slstm_seq(
+                cfg, p["slstm"], h, state=cache, return_state=True)
+    else:
+        raise ValueError(block_type)
+    x = x + a
+
+    if "cross" in p and enc_out is not None or (cross_kv is not None
+                                                and "cross" in p):
+        hx = rmsnorm(x, p["norm_x"], cfg.rms_eps)
+        if cross_kv is None:
+            cross_kv = attn.cross_kv(cfg, p["cross"], enc_out)
+        x = x + attn.cross_attend(cfg, p["cross"], hx, cross_kv, enc_valid)
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_type == "mlp":
+        h2 = rmsnorm(x, p["norm2"], cfg.rms_eps)
+        x = x + mlp_apply(p["mlp"], h2)
+    elif ffn_type == "moe":
+        h2 = rmsnorm(x, p["norm2"], cfg.rms_eps)
+        y, aux = moe_mod.moe_apply(cfg, p["moe"], h2)
+        x = x + y
+    return x, aux, new_cache, traj
+
+
+# ----------------------------------------------------------------------
+# Stacked body
+# ----------------------------------------------------------------------
+def init_body(key, cfg: ModelConfig, cross: bool = False):
+    """Stacked per-period params: {"p{i}": leaf (n_periods, ...)}."""
+    P, N = cfg.period, cfg.n_periods
+    keys = jax.random.split(key, N)
+
+    def init_period(k):
+        ks = split_keys(k, P)
+        return {f"p{i}": init_block(ks[i], cfg, cfg.block_pattern[i],
+                                    cfg.ffn_pattern[i], cross=cross)
+                for i in range(P)}
+
+    if N == 0:
+        return {}
+    return jax.vmap(init_period)(jnp.stack(keys))
+
+
+def init_body_cache(cfg: ModelConfig, batch: int, seq: int, dtype,
+                    cross: bool = False, enc_seq: int = 0):
+    P, N = cfg.period, cfg.n_periods
+
+    def one():
+        c = {f"p{i}": init_block_cache(cfg, cfg.block_pattern[i], batch, seq,
+                                       dtype)
+             for i in range(P)}
+        return c
+
+    base = one()
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (N,) + a.shape), base)
+    return stacked
+
+
+def apply_body(cfg: ModelConfig, body_p, x, *, mode, positions, caches=None,
+               pos=None, enc_out=None, cross_kvs=None, enc_valid=None,
+               remat: bool = False, collect_traj: bool = False):
+    """Scan the periodic body.  Returns (x, aux_sum, new_caches[, trajs]).
+
+    Decode/extend can be UNROLLED (REPRO_UNROLL_DECODE=1): a scan forces
+    double-buffered cache ys (in+out copies live simultaneously); unrolled
+    layers let XLA alias each layer's cache update in place — §Perf H1b."""
+    import os
+    P, N = cfg.period, cfg.n_periods
+    if N == 0:
+        empty = ({}, {}) if collect_traj else {}
+        return x, jnp.zeros((), jnp.float32), (caches if caches is not None
+                                               else empty)
+    has_cache = caches is not None
+    has_cross = cross_kvs is not None
+    unroll = (mode == "extend"
+              and os.environ.get("REPRO_UNROLL_DECODE") == "1")
+
+    def period_fn(x, per_p, per_cache, per_cross):
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        trajs = {}
+        for i in range(P):
+            ck = per_cache[f"p{i}"] if has_cache else None
+            cx = per_cross[f"p{i}"] if has_cross else None
+            x, aux, nc, tj = apply_block(
+                cfg, per_p[f"p{i}"], x, cfg.block_pattern[i],
+                cfg.ffn_pattern[i], mode=mode, positions=positions,
+                cache=ck, pos=pos, enc_out=enc_out, cross_kv=cx,
+                enc_valid=enc_valid, collect_traj=collect_traj)
+            aux_tot = aux_tot + aux
+            new_caches[f"p{i}"] = nc
+            trajs[f"p{i}"] = tj
+        return x, aux_tot, new_caches, trajs
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+
+    def scan_fn(carry, xs):
+        x, aux = carry
+        per_p = xs[0]
+        per_cache = xs[1] if has_cache else None
+        per_cross = xs[2] if has_cross else None
+        if mode == "train":
+            from repro.sharding import act_sharding
+            x = act_sharding.residual_constraint(x)   # §Perf H2c
+        x, a, ncs, tjs = period_fn(x, per_p, per_cache, per_cross)
+        if mode == "train":
+            ys = None
+        elif collect_traj:
+            ys = (ncs, tjs)
+        else:
+            ys = ncs
+        return (x, aux + a), ys
+
+    xs = (body_p,
+          caches if has_cache else jnp.zeros((N,)),
+          cross_kvs if has_cross else jnp.zeros((N,)))
+    if unroll:
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys_list = []
+        for i in range(N):
+            carry, ys_i = scan_fn(carry, jax.tree.map(lambda a: a[i], xs))
+            ys_list.append(ys_i)
+        (x, aux) = carry
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+    else:
+        (x, aux), ys = jax.lax.scan(scan_fn,
+                                    (x, jnp.zeros((), jnp.float32)), xs)
+    if collect_traj and mode != "train":
+        return x, aux, ys[0], ys[1]
+    return x, aux, ys

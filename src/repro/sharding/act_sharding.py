@@ -1,0 +1,46 @@
+"""Activation-sharding hooks (set by launchers; inert on single device).
+
+H2c (§Perf): sequence-parallel residual stream — between layers the
+carried activation (B, S, d) is sharded over BOTH data (batch) and model
+(sequence) axes, Megatron-SP style; XLA inserts the gather before
+attention/FFN and the scatter after.  Cuts the scan-residual memory floor
+(L x B x S x d) by the model-axis degree.
+"""
+MESH = None
+AXES = None
+SEQ_PARALLEL_RESIDUALS = False
+
+
+def set_mesh(mesh, axes, seq_parallel: bool = False):
+    global MESH, AXES, SEQ_PARALLEL_RESIDUALS
+    MESH, AXES, SEQ_PARALLEL_RESIDUALS = mesh, axes, seq_parallel
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint guarded by divisibility; no-op w/o mesh."""
+    if MESH is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    sizes = dict(MESH.shape)
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axs:
+            n *= sizes[a]
+        fixed.append(ax if dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(MESH, PartitionSpec(*fixed)))
+
+
+def residual_constraint(x):
+    """Apply the residual-stream sharding between layers (train only)."""
+    if MESH is None or AXES is None:
+        return x
+    if SEQ_PARALLEL_RESIDUALS:
+        return constrain(x, AXES.dp, AXES.model, None)
+    return constrain(x, AXES.dp, None, None)

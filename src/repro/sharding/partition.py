@@ -1,0 +1,217 @@
+"""Partitioning rules: params / optimizer state / caches / batches →
+PartitionSpec pytrees for the production mesh.
+
+Axis conventions (DESIGN.md §4):
+  "data"  — batch (training, prefill, decode) or KV-cache sequence
+            (context parallelism, long_500k decode with batch=1);
+  "model" — vocab, attention heads, FFN hidden, experts, SSM channels;
+  "pod"   — outer data axis (multi-pod).  Gradient all-reduce crosses
+            pods in training; serving shards requests over it.
+
+Every rule guards divisibility: a dim is only sharded when its size is a
+multiple of the mesh axis; otherwise it falls back (replicate, or shard an
+alternative dim — e.g. qwen2-moe's 60 experts are not divisible by 16, so
+expert weights shard the per-expert FFN dim instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: str = "data"
+    model: str = "model"
+    pod: Optional[str] = None          # set for multi-pod meshes
+
+    @property
+    def dp(self):
+        """Composite data-parallel axes (pod-major)."""
+        return (self.pod, self.data) if self.pod else (self.data,)
+
+
+def _size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+class Partitioner:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, axes: MeshAxes,
+                 fsdp: bool = False, seq_shard_fallback: bool = False):
+        """seq_shard_fallback: when KV heads don't divide the model axis,
+        shard the cache SEQUENCE over `model` (flash-decoding style KV
+        partitioning) instead of replicating the cache 16x.  §Perf H1."""
+        self.cfg, self.mesh, self.axes, self.fsdp = cfg, mesh, axes, fsdp
+        self.seq_fallback = seq_shard_fallback
+        self.M = mesh.shape[axes.model]
+        self.D = _size(mesh, axes.dp)
+
+    # -- helpers --------------------------------------------------------
+    def _m(self, dim: int):
+        return self.axes.model if dim % self.M == 0 else None
+
+    def _dp(self, dim: int):
+        return self.axes.dp if dim % self.D == 0 else None
+
+    def _named(self, spec) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameter rules -------------------------------------------------
+    def _param_rule(self, path, shape):
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        name = names[-1]
+        parent = names[-2] if len(names) > 1 else ""
+        stacked = 1 if ("body" in names or parent == "encoder"
+                        or "encoder" in names) and name not in () else 0
+        # encoder params are stacked over layers; body over periods
+        if "body" not in names and "encoder" not in names:
+            stacked = 0
+        core = shape[stacked:]
+        m = self.axes.model
+
+        def spec(*s):
+            return (None,) * stacked + tuple(s)
+
+        if name == "embedding":
+            return spec(self._m(core[0]), None)
+        if name == "lm_head":
+            return spec(None, self._m(core[1]))
+        if parent in ("mlstm",) and name in ("w_q", "w_k", "w_v"):
+            return spec(None, None, self._m(core[2]))        # (nh, dh, dh)
+        if name in ("w_q",):                                  # (d, nq, hd)
+            return spec(None, self._m(core[1]), None)
+        if name in ("w_uk", "w_uv"):                          # (rank, nq, hd)
+            return spec(None, self._m(core[1]), None)
+        if name in ("w_k", "w_v"):                            # (d, nkv, hd)
+            return spec(None, self._m(core[1]), None)
+        if name in ("b_q", "b_k", "b_v"):                     # (n, hd)
+            return spec(self._m(core[0]), None)
+        if name == "w_o":                                     # (nq, hd, d)
+            return spec(self._m(core[0]), None, None)
+        if name in ("w_dkv", "w_krope", "router"):
+            return spec(*([None] * len(core)))
+        if name in ("w_gate", "w_up"):
+            if len(core) == 3:                                # (E, d, f)
+                e = self._m(core[0])
+                return spec(e, None, None if e else self._m(core[2]))
+            return spec(None, self._m(core[1]))               # (d, ff)
+        if name == "w_down":
+            if len(core) == 3:                                # (E, f, d)
+                e = self._m(core[0])
+                return spec(e, None if e else self._m(core[1]), None)
+            return spec(self._m(core[0]), None)               # (ff, d)
+        if name in ("in_proj", "up_proj", "ffn_up", "w_in", "dt_proj"):
+            return spec(None, self._m(core[1]))
+        if name in ("out_proj", "down_proj", "ffn_down", "x_proj"):
+            return spec(self._m(core[0]), None)
+        if name in ("conv_w",):                               # (K, di)
+            return spec(None, self._m(core[1]))
+        if name in ("conv_b", "dt_bias", "D",):               # (di,)
+            return spec(self._m(core[0]))
+        if name == "A_log":                                   # (di, ds)
+            return spec(self._m(core[0]), None)
+        if name in ("w_i", "w_f"):                            # (di, nh)
+            return spec(self._m(core[0]), None)
+        if name == "r":                                       # (4, nh, dh, dh)
+            return spec(None, None, None, self._m(core[3]))
+        if name == "norm_w" and parent == "mlstm":
+            return spec(self._m(core[0]))
+        # norms, biases, gates, scalars → replicated
+        return spec(*([None] * len(core)))
+
+    def param_specs(self, params_shape):
+        """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+        def rule(path, leaf):
+            s = list(self._param_rule(path, leaf.shape))
+            if self.fsdp:
+                # shard the first replicated dim over data (ZeRO-3 style)
+                for i, ax in enumerate(s):
+                    if ax is None and leaf.shape[i] % self.D == 0 \
+                            and leaf.shape[i] >= self.D:
+                        s[i] = self.axes.dp
+                        break
+            return P(*s)
+        return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+    def opt_state_specs(self, params_shape):
+        ps = self.param_specs(params_shape)
+        return {"m": ps, "v": ps, "step": P()}
+
+    # -- cache rules ------------------------------------------------------
+    def cache_specs(self, cache_shape, shard_seq: bool = False):
+        """shard_seq=True → context parallelism: KV sequence axis over the
+        data axes (long_500k, batch=1)."""
+        def rule(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", str(k)))
+                     for k in path]
+            name = names[-1]
+            stacked = 1 if names[0] in ("body", "cross") else 0
+            core = leaf.shape[stacked:]
+
+            def spec(*s):
+                return P(*((None,) * stacked + tuple(s)))
+
+            if name in ("k", "v"):            # (B, S, nkv, hd)
+                if shard_seq:
+                    return spec(None, self.axes.dp, self._m(core[2]), None)
+                mh = self._m(core[2])
+                if mh is None and self.seq_fallback \
+                        and core[1] % self.M == 0:
+                    # kv heads indivisible -> shard seq over model instead
+                    return spec(self._dp(core[0]), self.axes.model, None,
+                                None)
+                return spec(self._dp(core[0]), None, mh, None)
+            if name in ("k_scale", "v_scale"):  # (B, S, nkv)
+                if shard_seq:
+                    return spec(None, self.axes.dp, self._m(core[2]))
+                mh = self._m(core[2])
+                if mh is None and self.seq_fallback \
+                        and core[1] % self.M == 0:
+                    return spec(self._dp(core[0]), self.axes.model, None)
+                return spec(self._dp(core[0]), None, mh)
+            if name in ("latent", "k_rope"):  # (B, S, rank)
+                if shard_seq:
+                    return spec(None, self.axes.dp, None)
+                if self.seq_fallback and core[1] % self.M == 0:
+                    return spec(self._dp(core[0]), self.axes.model, None)
+                return spec(self._dp(core[0]), None, None)
+            if name == "conv":                # (B, K-1, di)
+                return spec(self._dp(core[0]), None, self._m(core[2]))
+            if name == "ssm":                 # (B, di, ds)
+                return spec(self._dp(core[0]), self._m(core[1]), None)
+            if name == "C":                   # (B, nh, dh, dh)
+                return spec(self._dp(core[0]), None, None, self._m(core[3]))
+            if name == "n" and len(core) == 3:
+                return spec(self._dp(core[0]), None, self._m(core[2]))
+            if name in ("h", "c", "n", "m") and len(core) == 2:
+                return spec(self._dp(core[0]), self._m(core[1]))
+            if name == "m" and len(core) == 2:
+                return spec(self._dp(core[0]), None)
+            return spec(*([self._dp(core[0])] + [None] * (len(core) - 1)))
+        return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+    # -- batch rules ------------------------------------------------------
+    def batch_specs(self, batch_shape):
+        def rule(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", str(k)))
+                     for k in path]
+            name = names[-1]
+            if name == "positions" and len(leaf.shape) == 3:   # (3, B, S)
+                return P(None, self._dp(leaf.shape[1]), None)
+            b = self._dp(leaf.shape[0]) if leaf.shape else None
+            return P(*([b] + [None] * (len(leaf.shape) - 1)))
+        return jax.tree_util.tree_map_with_path(rule, batch_shape)

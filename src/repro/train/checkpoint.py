@@ -1,0 +1,59 @@
+"""Flat-npz checkpointing for param/optimizer pytrees (no orbax here)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = np.asarray(node)
+    walk("", tree)
+    return flat
+
+
+def save(path: str, tree, meta: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+
+def load(path: str, like=None):
+    """Restore.  If ``like`` (a pytree) is given, values are arranged into
+    its structure; otherwise a nested dict is rebuilt from the flat keys."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    nested = {}
+    for key in data.files:
+        parts = key.split("/")
+        node = nested
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    if like is None:
+        return nested
+
+    def fill(template, src):
+        if isinstance(template, dict):
+            return {k: fill(v, src[k]) for k, v in template.items()}
+        return jax.numpy.asarray(src)
+    return fill(like, nested)
+
+
+def load_meta(path: str):
+    with open(path + ".meta.json") as f:
+        return json.load(f)

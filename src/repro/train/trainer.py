@@ -1,0 +1,55 @@
+"""Training step: loss → grad → AdamW, with optional microbatch gradient
+accumulation (lax.scan over microbatches) and per-layer remat (the body
+scan already checkpoints each period)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.train import optimizer as opt_mod
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.AdamWConfig,
+                    microbatches: int = 1, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch["tokens"]``: (B, S+1); B must divide by
+    ``microbatches``."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model_mod.train_loss(cfg, params, mb, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                gsum, lsum = carry
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), metrics = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        params, opt_state, om = opt_mod.apply_updates(opt_cfg, params, grads,
+                                                      opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step

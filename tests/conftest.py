@@ -1,0 +1,11 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# exclusively for the dry-run launcher).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "dry-run XLA_FLAGS leaked into the test environment"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

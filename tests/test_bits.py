@@ -1,0 +1,63 @@
+"""Bit-accounting tests (eqs. (1), (2), (5), C-SQS overhead, gap coding)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bits
+
+
+@pytest.mark.parametrize("n,k", [(10, 3), (100, 5), (50257, 64),
+                                 (152064, 1), (1000, 0), (1000, 1000)])
+def test_log2_binom_matches_exact(n, k):
+    exact = math.log2(math.comb(n, k)) if 0 < k < n else 0.0
+    got = float(bits.log2_binom(n, k))
+    assert abs(got - exact) <= max(1e-3 * max(exact, 1), 1e-2), (got, exact)
+
+
+def test_payload_bits_eq2():
+    # log2 C(ell + K - 1, K - 1)
+    ell, K = 100, 16
+    exact = math.log2(math.comb(ell + K - 1, K - 1))
+    assert abs(float(bits.payload_bits(K, ell)) - exact) < 0.1
+
+
+def test_csqs_overhead_exceeds_topk():
+    V, K = 50257, 64
+    assert float(bits.subset_bits_conformal(V, K)) >= \
+        float(bits.subset_bits_topk(V, K))
+
+
+def test_token_bits_monotone_in_K():
+    V, ell = 50257, 100
+    ks = jnp.asarray([1.0, 4.0, 16.0, 64.0, 256.0])
+    tb = np.asarray(bits.token_bits(V, ks, ell, adaptive=False))
+    assert np.all(np.diff(tb) > 0)
+
+
+def test_uncompressed_dominates():
+    V = 50257
+    assert bits.uncompressed_bits(V) > float(bits.dense_qs_bits(V, 100))
+    assert float(bits.dense_qs_bits(V, 100)) > \
+        float(bits.token_bits(V, 64.0, 100, adaptive=True))
+
+
+def test_gap_code_low_ids_beat_uniform_bound():
+    """Gap coding wins when the support sits on small ids (real BPE
+    vocabularies are frequency-sorted); it may lose on uniform supports."""
+    V, K = 50257, 64
+    mask = np.zeros((1, V), bool)
+    mask[0, :K] = True                      # most-frequent tokens
+    gap = float(bits.gap_code_subset_bits(jnp.asarray(mask))[0])
+    paper = float(bits.subset_bits_topk(V, K))
+    assert gap < paper, (gap, paper)
+
+
+def test_gap_code_counts_all_selected():
+    rng = np.random.default_rng(0)
+    mask = np.zeros((3, 977), bool)
+    for r in range(3):
+        mask[r, rng.choice(977, 20, replace=False)] = True
+    g = np.asarray(bits.gap_code_subset_bits(jnp.asarray(mask)))
+    assert np.all(g > 0)

@@ -1,0 +1,72 @@
+"""SLQ (Algorithm 2) unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.slq import lattice_quantize, tv_distance
+
+
+def random_sparse_dist(rng, V, K):
+    q = np.zeros(V, np.float32)
+    idx = rng.choice(V, K, replace=False)
+    vals = rng.random(K).astype(np.float32) + 1e-3
+    q[idx] = vals / vals.sum()
+    return q, idx
+
+
+@pytest.mark.parametrize("V,K,ell", [(64, 8, 100), (1024, 32, 100),
+                                     (1024, 32, 7), (4096, 256, 1000),
+                                     (64, 1, 100), (64, 64, 50)])
+def test_sum_exact(V, K, ell):
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        q, _ = random_sparse_dist(rng, V, K)
+        q_hat, b = lattice_quantize(jnp.asarray(q), ell)
+        assert int(np.asarray(b).sum()) == ell
+        assert np.all(np.asarray(b) >= 0)
+        np.testing.assert_allclose(np.asarray(q_hat).sum(), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("V,K,ell", [(256, 16, 100), (256, 16, 25),
+                                     (1024, 128, 100)])
+def test_tv_bound(V, K, ell):
+    """Paper eq. (20): TV(q̃, q̂) ≤ K/(4ℓ)."""
+    rng = np.random.default_rng(1)
+    for trial in range(10):
+        q, _ = random_sparse_dist(rng, V, K)
+        q_hat, _ = lattice_quantize(jnp.asarray(q), ell)
+        tv = float(tv_distance(jnp.asarray(q), q_hat))
+        assert tv <= K / (4.0 * ell) + 1e-5, (tv, K / (4 * ell))
+
+
+def test_lattice_point_fixed():
+    """Distributions already on the lattice are unchanged."""
+    ell = 100
+    q = jnp.asarray([0.25, 0.5, 0.13, 0.12, 0.0, 0.0], jnp.float32)
+    q_hat, b = lattice_quantize(q, ell)
+    np.testing.assert_allclose(np.asarray(q_hat), np.asarray(q), atol=1e-6)
+
+
+def test_batched():
+    rng = np.random.default_rng(2)
+    qs = np.stack([random_sparse_dist(rng, 128, 16)[0] for _ in range(7)])
+    q_hat, b = lattice_quantize(jnp.asarray(qs), 100)
+    assert q_hat.shape == qs.shape
+    np.testing.assert_array_equal(np.asarray(b).sum(-1), 100)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 50), st.integers(5, 500),
+       st.integers(0, 2**31 - 1))
+def test_property_sum_and_support(V, K, ell, seed):
+    K = min(K, V)
+    rng = np.random.default_rng(seed)
+    q, idx = random_sparse_dist(rng, V, K)
+    q_hat, b = lattice_quantize(jnp.asarray(q), ell)
+    b = np.asarray(b)
+    assert b.sum() == ell
+    assert b.min() >= 0
+    off = np.setdiff1d(np.arange(V), idx)
+    assert b[off].sum() == 0, "mass outside the support"

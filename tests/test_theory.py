@@ -1,0 +1,51 @@
+"""Theorem 1 decomposition: exact rejection probability vs the bound."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sqs import softmax_temp, sparsify_topk, sparsify_threshold
+from repro.core.theory import thm1_bound_total, thm1_terms
+
+
+def _dists(seed, V=256, n=64, temp=1.0):
+    rng = np.random.default_rng(seed)
+    ql = jnp.asarray(rng.normal(0, 2.0, (n, V)), jnp.float32)
+    pl = jnp.asarray(rng.normal(0, 2.0, (n, V)), jnp.float32)
+    return softmax_temp(ql, temp), softmax_temp(pl, temp)
+
+
+def test_thm1_bound_dominates_exact_topk():
+    q, p = _dists(0)
+    ell, K = 100, 16
+    r = sparsify_topk(q, K, ell)
+    t = thm1_terms(q, p, r.q_hat, r.dropped, r.K, ell)
+    exact, ub = thm1_bound_total(t)
+    assert float(exact) <= float(ub) + 1e-4, (float(exact), float(ub))
+
+
+def test_thm1_bound_dominates_exact_threshold():
+    q, p = _dists(1)
+    ell = 100
+    r = sparsify_threshold(q, jnp.full((q.shape[0], 1), 1e-3), ell)
+    t = thm1_terms(q, p, r.q_hat, r.dropped, r.K, ell)
+    exact, ub = thm1_bound_total(t)
+    assert float(exact) <= float(ub) + 1e-4
+
+
+def test_thm1_terms_tighten_with_resolution():
+    """Larger ℓ ⇒ smaller lattice term ⇒ tighter bound."""
+    q, p = _dists(2)
+    bounds = []
+    for ell in (25, 100, 400):
+        r = sparsify_topk(q, 32, ell)
+        t = thm1_terms(q, p, r.q_hat, r.dropped, r.K, ell)
+        bounds.append(float(thm1_bound_total(t)[1]))
+    assert bounds[0] > bounds[1] > bounds[2]
+
+
+def test_per_token_rejection_identity():
+    """P(reject at n) = TV(q̂, p) — eq. (14) as an identity."""
+    q, p = _dists(3, n=8)
+    r = sparsify_topk(q, 16, 100)
+    t = thm1_terms(q, p, r.q_hat, r.dropped, r.K, 100)
+    tv = 0.5 * np.abs(np.asarray(r.q_hat) - np.asarray(p)).sum(-1)
+    np.testing.assert_allclose(np.asarray(t.exact_rej), tv, atol=1e-6)

@@ -1,0 +1,85 @@
+"""Training substrate: optimizer, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.train import checkpoint
+from repro.train.optimizer import (AdamWConfig, apply_updates, init_state,
+                                   schedule)
+from repro.train.trainer import make_train_step
+
+
+def test_loss_decreases():
+    cfg = configs.smoke_variant(configs.get_config("deepseek-7b"))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32, batch=8))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=40)))
+    st = init_state(params)
+    losses = []
+    for b in data.batches(40):
+        params, st, m = step(params, st, {"tokens": jnp.asarray(b["tokens"])})
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_microbatch_equals_full_batch_grads():
+    cfg = configs.smoke_variant(configs.get_config("qwen2.5-3b"))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16, batch=8))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(data.sample())}
+    oc = AdamWConfig(lr=1e-3, total_steps=10)
+    p1, _, m1 = jax.jit(make_train_step(cfg, oc, microbatches=1))(
+        params, init_state(params), batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, oc, microbatches=4))(
+        params, init_state(params), batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-5, d
+
+
+def test_grad_clip_and_schedule():
+    oc = AdamWConfig(lr=1.0, grad_clip=1.0, warmup_steps=10,
+                     total_steps=100)
+    assert float(schedule(oc, 0)) == 0.0
+    assert abs(float(schedule(oc, 10)) - 1.0) < 1e-6
+    assert float(schedule(oc, 100)) <= oc.lr * (oc.min_lr_frac + 1e-6)
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    _, _, m = apply_updates(oc, params, grads, init_state(params))
+    assert float(m["grad_norm"]) > 1.0            # raw norm reported
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = configs.smoke_variant(configs.get_config("xlstm-1.3b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ck.npz")
+    checkpoint.save(path, params, meta={"arch": cfg.name})
+    loaded = checkpoint.load(path, like=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert checkpoint.load_meta(path)["arch"] == cfg.name
+
+
+def test_data_determinism_and_learnability():
+    d1 = SyntheticLM(DataConfig(seed=9)).sample(4, 32)
+    d2 = SyntheticLM(DataConfig(seed=9)).sample(4, 32)
+    np.testing.assert_array_equal(d1, d2)
+    # bigram structure present: successor entropy < unigram entropy
+    cfg = DataConfig(seed=9, vocab=64, p_bigram=0.9, jitter=1)
+    data = SyntheticLM(cfg)
+    toks = data.sample(64, 256)
+    x, y = toks[:, :-1].ravel(), toks[:, 1:].ravel()
+    joint = np.zeros((64, 64))
+    np.add.at(joint, (x, y), 1)
+    pxy = joint / joint.sum()
+    px = pxy.sum(1, keepdims=True)
+    py = pxy.sum(0, keepdims=True)
+    mi = np.nansum(pxy * np.log2(pxy / (px * py + 1e-12) + 1e-12))
+    assert mi > 1.0, mi                       # strongly predictive bigram

@@ -1,0 +1,84 @@
+"""Speculative-decoding verification: the lossless-distribution property.
+
+With the edge sampling drafts from q̂ and the cloud verifying against the
+same q̂, the marginal of the next emitted token must equal the target p —
+regardless of how lossy q̂ is.  This is THE invariant that lets SQS
+compress aggressively without correctness loss.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.slq import tv_distance
+from repro.core.sqs import dense_qs, sparsify_topk
+from repro.core.verify import acceptance_prob, verify
+
+
+def _empirical_first_token(key, q_hat, p, n=40000):
+    """Draft 1 token from q̂, verify against p, return empirical dist of
+    the emitted token (accepted draft or resample)."""
+    V = q_hat.shape[-1]
+    keys = jax.random.split(key, 2)
+    drafts = jax.random.categorical(
+        keys[0], jnp.log(jnp.maximum(q_hat, 1e-30)), shape=(n,))
+    res = verify(keys[1], drafts[:, None],
+                 jnp.broadcast_to(q_hat, (n, 1, V)),
+                 jnp.broadcast_to(jnp.stack([p, p]), (n, 2, V)))
+    emitted = jnp.where(res.n_accept == 1, drafts, res.new_token)
+    return np.bincount(np.asarray(emitted), minlength=V) / n
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_distribution_preserved_sparse_draft(seed):
+    V = 12
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.ones(V)).astype(np.float32)
+    q = rng.dirichlet(np.ones(V) * 0.5).astype(np.float32)
+    r = sparsify_topk(jnp.asarray(q)[None], K=4, ell=50)   # very lossy
+    q_hat = r.q_hat[0]
+    emp = _empirical_first_token(jax.random.PRNGKey(seed), q_hat,
+                                 jnp.asarray(p))
+    tv = 0.5 * np.abs(emp - p).sum()
+    assert tv < 0.02, tv                      # matches TARGET, not draft
+    tv_draft = 0.5 * np.abs(emp - np.asarray(q_hat)).sum()
+    assert tv_draft > 0.05                    # and differs from the draft
+
+
+def test_acceptance_probability_is_one_minus_tv():
+    V = 16
+    rng = np.random.default_rng(7)
+    p = jnp.asarray(rng.dirichlet(np.ones(V)), jnp.float32)
+    q = jnp.asarray(rng.dirichlet(np.ones(V)), jnp.float32)
+    a = float(acceptance_prob(q[None], p[None])[0])
+    assert abs(a - (1.0 - float(tv_distance(q, p)))) < 1e-6
+    # empirical check
+    key = jax.random.PRNGKey(0)
+    n = 60000
+    drafts = jax.random.categorical(key, jnp.log(q), shape=(n,))
+    res = verify(jax.random.PRNGKey(1), drafts[:, None],
+                 jnp.broadcast_to(q, (n, 1, V)),
+                 jnp.broadcast_to(jnp.stack([p, p]), (n, 2, V)))
+    assert abs(float(res.n_accept.mean()) - a) < 0.02
+
+
+def test_identical_dists_always_accept():
+    V = 32
+    p = dense_qs(jnp.full((3, V), 1.0 / V), ell=64).q_hat
+    drafts = jnp.zeros((3, 5), jnp.int32)
+    res = verify(jax.random.PRNGKey(0), drafts,
+                 jnp.broadcast_to(p[:, None], (3, 5, V)),
+                 jnp.broadcast_to(p[:, None], (3, 6, V)))
+    np.testing.assert_array_equal(np.asarray(res.n_accept), 5)
+    assert not np.any(np.asarray(res.rejected))
+
+
+def test_live_mask_truncates():
+    """Tokens beyond the bit budget (live=False) must not be accepted."""
+    V = 8
+    p = jnp.full((2, 4, V), 1.0 / V)
+    q = jnp.full((2, 3, V), 1.0 / V)
+    live = jnp.asarray([[True, True, False], [True, False, False]])
+    res = verify(jax.random.PRNGKey(0), jnp.zeros((2, 3), jnp.int32),
+                 q, p, live)
+    assert res.n_accept[0] <= 2 and res.n_accept[1] <= 1
