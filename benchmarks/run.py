@@ -19,7 +19,8 @@ def _rows_to_csv(name, rows, latency_key, derived_key, scale=1e6):
         tag = "_".join(str(r.get(k, "")) for k in
                        ("method", "detail", "param", "temperature", "check",
                         "vocab", "name", "eta", "K", "B", "V", "arch",
-                        "shape", "ell", "draft") if k in r)
+                        "shape", "ell", "draft", "policy", "rate_rps")
+                       if k in r)
         out.append(f"{name}[{tag}],{us:.1f},{r.get(derived_key, '')}")
     return out
 
@@ -40,7 +41,8 @@ def main():
 
     from benchmarks import (bits_table, draft_scale, ell_resolution,
                             fig2_temperature, fig4_hparams, fig5_adaptivity,
-                            fig6_compare, kernel_bench, roofline, thm_checks)
+                            fig6_compare, kernel_bench, roofline,
+                            serve_load, thm_checks)
 
     reg("fig2_temperature", lambda: _rows_to_csv(
         "fig2", fig2_temperature.run(q)[0], "latency_per_batch_s",
@@ -68,6 +70,9 @@ def main():
     reg("draft_scale", lambda: _rows_to_csv(
         "draft", draft_scale.run(q)[0], "latency_per_batch_s",
         "accept_rate"))
+    reg("serve_load", lambda: _rows_to_csv(
+        "serve", serve_load.run(smoke=q)[0], "latency_p50_s",
+        "throughput_tok_s"))
 
     def roofline_rows():
         rows = roofline.build_table()

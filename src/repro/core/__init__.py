@@ -5,4 +5,5 @@ from repro.core import bits, channel, conformal, theory
 from repro.core.verify import verify as sd_verify
 from repro.core.verify import acceptance_prob, VerifyResult
 from repro.core.engine import (EdgeCloudEngine, MethodConfig, EngineConfig,
-                               rollback_cache, summarize)
+                               rollback_cache, row_key, summarize)
+from repro.core.channel import ChannelConfig, SharedUplink

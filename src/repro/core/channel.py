@@ -4,10 +4,19 @@ End-to-end latency per SD batch t:
     t_total = t_SLM(draft) + t_uplink(bits) + t_LLM(verify) [+ t_downlink]
 The compute terms are measured (wall-clock) or modeled; the link terms are
 bits / rate + per-message overhead.
+
+Serving (repro.serve) extends the single-stream model with a CONTENDED
+link: the cloud's ingress is one shared uplink over which every live
+request's per-round payload is serialised FIFO.  ``SharedUplink`` tracks
+the busy-until time of the link so each transmission sees the queueing
+delay induced by the requests scheduled ahead of it — this is what turns
+the paper's bit budgets into per-request latency under load.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+from typing import NamedTuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,5 +37,46 @@ def downlink_time(ch: ChannelConfig, bits) -> float:
 
 def feedback_bits(L_max: int, vocab: int) -> float:
     """Cloud -> edge: accepted count + one token id."""
-    import math
     return math.ceil(math.log2(L_max + 1)) + math.ceil(math.log2(vocab))
+
+
+class Transmission(NamedTuple):
+    start_s: float        # when the link starts serialising this payload
+    end_s: float          # when the last bit leaves the edge
+    arrive_s: float       # when it reaches the cloud (end + propagation)
+    wait_s: float         # queueing delay behind earlier transmissions
+
+
+class SharedUplink:
+    """FIFO contended uplink shared by all live edge devices.
+
+    One transmission occupies the link for
+        (bits + per_msg_overhead_bits) / uplink_bps
+    seconds; propagation (rtt/2) is added after serialisation and does
+    not occupy the link.  ``transmit`` is called in scheduling order, so
+    per-request ``wait_s`` is the head-of-line blocking each request
+    experiences on the shared link."""
+
+    def __init__(self, ch: ChannelConfig):
+        self.ch = ch
+        self.busy_until_s = 0.0
+        self.busy_total_s = 0.0
+
+    def reset(self):
+        self.busy_until_s = 0.0
+        self.busy_total_s = 0.0
+
+    def transmit(self, now_s: float, bits: float) -> Transmission:
+        start = max(now_s, self.busy_until_s)
+        dur = (bits + self.ch.per_msg_overhead_bits) / self.ch.uplink_bps
+        end = start + dur
+        self.busy_until_s = end
+        self.busy_total_s += dur
+        return Transmission(start, end, end + self.ch.rtt_s / 2,
+                            start - now_s)
+
+    def utilization(self, horizon_s: float) -> float:
+        """Fraction of [0, horizon] the link spent serialising bits."""
+        if horizon_s <= 0:
+            return 0.0
+        return min(1.0, self.busy_total_s / horizon_s)

@@ -41,6 +41,18 @@ def backtrack(beta_traj, n_keep):
     return jnp.take_along_axis(beta_traj, idx[None, :], axis=0)[0]
 
 
+def admit_rows(beta, fresh_mask, beta0: float):
+    """Per-request β state for continuous batching: rows where
+    ``fresh_mask`` is True belong to a newly-admitted request and restart
+    at β₀; all other rows keep their in-flight threshold.  The controller
+    state is strictly per-request — a request joining the batch must not
+    perturb the thresholds of requests already decoding (Theorem 2 is a
+    per-stream guarantee)."""
+    beta = jnp.asarray(beta, jnp.float32)
+    return jnp.where(jnp.asarray(fresh_mask, jnp.bool_),
+                     jnp.float32(beta0), beta)
+
+
 def thm2_bound(alpha: float, eta: float, beta0: float, T) -> jnp.ndarray:
     """RHS of Theorem 2: α + (|β₁¹| + 1 + ηα)/(ηT)."""
     T = jnp.asarray(T, jnp.float32)

@@ -22,6 +22,23 @@ Per SD batch t (one ``round``):
            attention KV, via per-step state snapshots for SSM/hybrid
            blocks (beyond-paper: makes SD correct for Mamba/xLSTM/Jamba
            targets, DESIGN.md §5).
+
+Serving / continuous batching (repro.serve): every piece of per-sequence
+state — RNG key, conformal β, cache slot, position, x_last — is keyed by
+batch ROW, and ``run_round`` takes an active mask, so rows double as
+SESSION SLOTS that requests join and leave mid-flight:
+
+    init_slots(n_slots, cache_len)   allocate empty per-slot caches
+    admit_slot(slot, prompt, seed)   batch-1 prefill scattered into slot
+    run_round()                      one SD batch over the active slots
+    release_slot(slot)               free the slot (request finished)
+
+Per-row RNG (jax.random.fold_in per row, vmapped splits thereafter)
+guarantees a request's token stream is independent of which other
+requests share the batch — the masked-batch equivalence property the
+scheduler tests assert.  The request/arrival lifecycle, admission
+control, and the contended-uplink clock live in ``repro.serve``
+(scheduler.py, session.py); this engine only exposes the slot API.
 """
 from __future__ import annotations
 
@@ -73,6 +90,19 @@ def _seq_periods(cfg: ModelConfig):
             if cfg.block_pattern[i] in SEQ_BLOCKS]
 
 
+def row_key(seed: int, row: int = 0):
+    """Per-row PRNG root: fold the row index into the stream seed.  A
+    request admitted with ``seed`` into ANY slot gets row_key(seed, 0) —
+    identical to row 0 of a solo EdgeCloudEngine(seed=seed) run."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), row)
+
+
+def _split_rows(keys, num: int = 2):
+    """keys: (B, 2) -> (num, B, 2) independent per-row subkeys."""
+    kk = jax.vmap(lambda k: jax.random.split(k, num))(keys)
+    return tuple(kk[:, i] for i in range(num))
+
+
 def rollback_cache(cfg: ModelConfig, cache, traj, n_keep):
     """Restore sequential-state leaves to the snapshot after position
     ``n_keep − 1`` (n_keep ≥ 1 tokens kept).  Positional (KV) leaves need
@@ -104,7 +134,7 @@ class EdgeCloudEngine:
         self.dc, self.tc = draft_cfg, target_cfg
         self.dp, self.tp = draft_params, target_params
         self.m, self.e, self.ch = method, engine, channel
-        self.key = jax.random.PRNGKey(seed)
+        self.seed = seed
         self.V = draft_cfg.vocab
         self._draft_jit = jax.jit(self._draft_round)
         self._verify_jit = jax.jit(self._verify_round)
@@ -158,20 +188,22 @@ class EdgeCloudEngine:
                        if m.name == "csqs" else 0.0))
         return r, bits, gap_bits
 
-    def _draft_round(self, dp, cache, x_last, pos, beta, key):
+    def _draft_round(self, dp, cache, x_last, pos, beta, keys):
         """Returns drafts d_1..d_L, per-token q̂/q/bits/β trajectory and the
-        advanced edge cache (+ per-step sequential-state snapshots)."""
+        advanced edge cache (+ per-step sequential-state snapshots).
+        keys: (B, 2) per-row PRNG keys — each row consumes only its own
+        stream (masked-batch equivalence for serving)."""
         L = self.e.L_max
         ecfg = self.dc
         seq_p = _seq_periods(ecfg)
 
         def step(carry, i):
-            cache, tok, beta, key, pos = carry
-            key, k1 = jax.random.split(key)
+            cache, tok, beta, keys, pos = carry
+            keys, k1 = _split_rows(keys)
             logits, cache = model_mod.decode_step(ecfg, dp, tok, cache, pos)
             q = sqs_mod.softmax_temp(logits, self.e.temperature)
             r, bits, gap_bits = self._sparsify(q, beta, logits=logits)
-            nxt = jax.random.categorical(
+            nxt = jax.vmap(jax.random.categorical)(
                 k1, jnp.log(jnp.maximum(r.q_hat, 1e-30))).astype(jnp.int32)
             new_beta = conformal.update(beta, r.dropped, self.m.alpha,
                                         self.m.eta) \
@@ -180,9 +212,9 @@ class EdgeCloudEngine:
             ys = dict(token=nxt, q_hat=r.q_hat, q=q, bits=bits,
                       gap_bits=gap_bits, dropped=r.dropped, K=r.K,
                       beta=new_beta, snap=snap)
-            return (cache, nxt, new_beta, key, pos + 1), ys
+            return (cache, nxt, new_beta, keys, pos + 1), ys
 
-        carry0 = (cache, x_last, beta, key, pos)
+        carry0 = (cache, x_last, beta, keys, pos)
         carry, ys = jax.lax.scan(step, carry0, jnp.arange(L + 1))
         cache = carry[0]
         return cache, ys
@@ -207,7 +239,6 @@ class EdgeCloudEngine:
         B, S0 = prompts.shape
         self.B = B
         total = S0 + 4096  # cache capacity headroom
-        enc = None
         _, self.dcache = model_mod.prefill(self.dc, self.dp,
                                            prompts[:, :-1],
                                            cache_len=total)
@@ -217,13 +248,95 @@ class EdgeCloudEngine:
         self.x_last = prompts[:, -1].astype(jnp.int32)
         self.pos = jnp.full((B,), S0 - 1, jnp.int32)
         self.beta = jnp.full((B,), self.m.beta0, jnp.float32)
+        self.keys = jnp.stack([row_key(self.seed, b) for b in range(B)])
+        self.active = np.ones((B,), bool)
         self.out_tokens = [[] for _ in range(B)]
 
     # ------------------------------------------------------------------
+    # Session-slot API (continuous batching — repro.serve)
+    # ------------------------------------------------------------------
+    def init_slots(self, n_slots: int, cache_len: int):
+        """Allocate ``n_slots`` empty session slots with per-slot cache
+        capacity ``cache_len``.  Slots are filled by admit_slot and freed
+        by release_slot; run_round only advances active slots."""
+        assert self.dc.n_encoder_layers == 0 and \
+            self.tc.n_encoder_layers == 0, \
+            "serving slots do not support encoder-decoder architectures"
+        self.B = n_slots
+        self.cache_len = cache_len
+        self.dcache = model_mod.init_cache(self.dc, n_slots, cache_len)
+        self.tcache = model_mod.init_cache(self.tc, n_slots, cache_len)
+        self.x_last = jnp.zeros((n_slots,), jnp.int32)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.beta = jnp.full((n_slots,), self.m.beta0, jnp.float32)
+        self.keys = jnp.stack([row_key(self.seed, b)
+                               for b in range(n_slots)])
+        self.active = np.zeros((n_slots,), bool)
+        self.out_tokens = [[] for _ in range(n_slots)]
+        self._prefill_d = jax.jit(functools.partial(
+            model_mod.prefill, self.dc, cache_len=cache_len))
+        self._prefill_t = jax.jit(functools.partial(
+            model_mod.prefill, self.tc, cache_len=cache_len))
+
+    @staticmethod
+    def _scatter_slot(big, small, slot: int):
+        """Write a batch-1 cache into batch row ``slot`` of a multi-slot
+        cache.  Body/cross leaves carry batch at axis 1 (period-stacked);
+        prefix leaves at axis 0."""
+        out = dict(big)
+        for name, sub in big.items():
+            axis = 0 if name == "prefix" else 1
+            out[name] = jax.tree.map(
+                lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), slot, axis=axis),
+                sub, small[name])
+        return out
+
+    def admit_slot(self, slot: int, prompt, seed: int):
+        """Prefill ``prompt`` (1-D int32, ≥ 2 tokens) into ``slot``.
+        The request's RNG/β/position state restarts from scratch — other
+        slots' caches and controller state are untouched (their leaves
+        are only re-packed, not re-computed).
+
+        Capacity contract: each round writes draft KV up to pos + L_max,
+        and pos advances with every accepted token, so the CALLER must
+        bound generation length such that prompt + generated + L_max + 1
+        fits in cache_len (ServeSession enforces this from the request's
+        max_new_tokens; the engine can only check the first round)."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        assert prompt.ndim == 1 and prompt.shape[0] >= 2
+        assert not self.active[slot], f"slot {slot} still occupied"
+        S0 = int(prompt.shape[0])
+        assert S0 + self.e.L_max + 1 <= self.cache_len, \
+            f"prompt ({S0}) + draft window ({self.e.L_max + 1}) exceeds " \
+            f"slot capacity {self.cache_len}"
+        _, dcache1 = self._prefill_d(self.dp, prompt[None, :-1])
+        _, tcache1 = self._prefill_t(self.tp, prompt[None, :-1])
+        self.dcache = self._scatter_slot(self.dcache, dcache1, slot)
+        self.tcache = self._scatter_slot(self.tcache, tcache1, slot)
+        self.x_last = self.x_last.at[slot].set(prompt[-1])
+        self.pos = self.pos.at[slot].set(S0 - 1)
+        self.beta = conformal.admit_rows(
+            self.beta, jnp.arange(self.B) == slot, self.m.beta0)
+        self.keys = self.keys.at[slot].set(row_key(seed, 0))
+        self.active[slot] = True
+        self.out_tokens[slot] = []
+
+    def release_slot(self, slot: int):
+        """Evict a finished request; the slot's cache becomes dead weight
+        until the next admit_slot overwrites it."""
+        self.active[slot] = False
+
+    # ------------------------------------------------------------------
     def run_round(self):
-        """One SD batch.  Returns a metrics dict (host values)."""
+        """One SD batch over the ACTIVE rows.  Returns a metrics dict
+        (host values).  Inactive slots still flow through the compute
+        (static shapes) but are masked out of budgets, rollback depth,
+        state advancement and every reported statistic."""
         L = self.e.L_max
-        self.key, kd, kv = jax.random.split(self.key, 3)
+        active = np.asarray(self.active, bool)
+        n_active = max(int(active.sum()), 1)
+        self.keys, kd, kv = _split_rows(self.keys, 3)
 
         t0 = time.perf_counter()
         dcache, ys = self._draft_jit(self.dp, self.dcache, self.x_last,
@@ -238,10 +351,12 @@ class EdgeCloudEngine:
         dropped = np.asarray(ys["dropped"][:L + 1]).T     # (B, L+1)
         Ks = np.asarray(ys["K"][:L]).T
 
-        # budget-driven L^t (paper §4): stop when bits exhausted, >= 1
+        # budget-driven L^t (paper §4): stop when bits exhausted, >= 1;
+        # inactive slots transmit nothing and accept nothing
         cum = np.cumsum(bits, axis=1)
         live_np = cum <= self.e.bit_budget
         live_np[:, 0] = True
+        live_np &= active[:, None]
         live = jnp.asarray(live_np)
 
         tokens_in = jnp.concatenate([self.x_last[:, None], drafts], axis=1)
@@ -253,46 +368,57 @@ class EdgeCloudEngine:
         t_llm = time.perf_counter() - t0
 
         T = res.n_accept                                   # (B,)
-        # --- rollbacks ---
-        self.tcache = rollback_cache(self.tc, tcache, traj, T + 1)
+        act_j = jnp.asarray(active)
+        # --- rollbacks (masked: inactive slots keep depth 0) ---
+        T_eff = jnp.where(act_j, T, 0)
+        self.tcache = rollback_cache(self.tc, tcache, traj, T_eff + 1)
         edge_traj = ({p_: ys["snap"][p_] for p_ in _seq_periods(self.dc)}
                      if _is_stateful(self.dc) else None)
         if edge_traj is not None:
             edge_traj = jax.tree.map(
                 lambda a: jnp.moveaxis(a, 0, 2), edge_traj)  # (N,B,L+1,...)
-        self.dcache = rollback_cache(self.dc, dcache, edge_traj, T + 1)
+        self.dcache = rollback_cache(self.dc, dcache, edge_traj, T_eff + 1)
         # --- β backtrack (Alg. 1 lines 12-13): keep updates 0..T ---
         if self.m.name == "csqs":
             beta_traj = ys["beta"]                         # (L+1, B)
-            self.beta = jnp.take_along_axis(beta_traj, T[None, :],
-                                            axis=0)[0]
-        # --- bookkeeping ---
-        self.pos = self.pos + T + 1
-        self.x_last = res.new_token
+            back = jnp.take_along_axis(beta_traj, T[None, :], axis=0)[0]
+            self.beta = jnp.where(act_j, back, self.beta)
+        # --- bookkeeping (active rows only) ---
+        self.pos = self.pos + jnp.where(act_j, T + 1, 0)
+        self.x_last = jnp.where(act_j, res.new_token, self.x_last)
         T_np = np.asarray(T)
-        am = np.asarray(res.accept_mask)
         nt = np.asarray(res.new_token)
         dr = np.asarray(drafts)
+        emitted = [[] for _ in range(self.B)]
         for b in range(self.B):
-            self.out_tokens[b].extend(dr[b, :T_np[b]].tolist())
-            self.out_tokens[b].append(int(nt[b]))
+            if not active[b]:
+                continue
+            emitted[b] = dr[b, :T_np[b]].tolist() + [int(nt[b])]
+            self.out_tokens[b].extend(emitted[b])
 
-        live_bits = float((bits * live_np).sum() / self.B)
-        live_gap_bits = float((gap_bits * live_np).sum() / self.B)
+        bits_row = (bits * live_np).sum(1)                 # (B,)
+        gap_bits_row = (gap_bits * live_np).sum(1)
+        live_bits = float(bits_row.sum() / n_active)
+        live_gap_bits = float(gap_bits_row.sum() / n_active)
         t_up = channel_mod.uplink_time(self.ch, live_bits)
         t_down = channel_mod.downlink_time(
             self.ch, channel_mod.feedback_bits(L, self.V))
         metrics = {
-            "n_accept": T_np,
-            "rejected": np.asarray(res.rejected),
+            "n_accept": np.where(active, T_np, 0),
+            "rejected": np.asarray(res.rejected) & active,
             "L_live": live_np.sum(1),
             "bits": live_bits,
             "gap_bits": live_gap_bits,
+            "bits_row": bits_row,
+            "gap_bits_row": gap_bits_row,
+            "active": active.copy(),
+            "emitted": emitted,
             "K_mean": float((Ks * live_np).sum() / max(live_np.sum(), 1)),
-            "dropped_mean": float(dropped[:, :L].mean()),
+            "dropped_mean": float(dropped[active, :L].mean())
+            if active.any() else 0.0,
             "t_slm": t_slm, "t_up": t_up, "t_llm": t_llm, "t_down": t_down,
             "t_total": t_slm + t_up + t_llm + t_down,
-            "tokens_out": 1 + T_np,
+            "tokens_out": np.where(active, 1 + T_np, 0),
         }
         if self.e.collect_theory:
             metrics["q"] = np.asarray(ys["q"][:L].swapaxes(0, 1))

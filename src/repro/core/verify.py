@@ -26,12 +26,26 @@ def verify(key, draft_tokens, q_hat, p_dists, live=None) -> VerifyResult:
     """draft_tokens: (B, L); q_hat: (B, L, V) quantized draft dists;
     p_dists: (B, L+1, V) — p_dists[:, i] is the target dist conditioned on
     everything before draft token i (p_dists[:, L] is the bonus dist).
-    live: (B, L) bool — draft positions within the bit budget L^t."""
+    live: (B, L) bool — draft positions within the bit budget L^t.
+
+    ``key`` may be a single PRNG key (shape (2,), shared randomness over
+    the batch — the classic path) or per-row keys of shape (B, 2): each
+    row then consumes ONLY its own stream, so a row's verdicts are
+    independent of which other rows share the batch.  Per-request RNG is
+    what makes continuous batching (repro.serve) reproduce the exact
+    solo-run token stream of every request."""
     B, L, V = q_hat.shape
     if live is None:
         live = jnp.ones((B, L), jnp.bool_)
-    ku, ks = jax.random.split(key)
-    u = jax.random.uniform(ku, (B, L), jnp.float32, 1e-12, 1.0)
+    per_row = key.ndim == 2
+    if per_row:
+        kk = jax.vmap(jax.random.split)(key)             # (B, 2, 2)
+        ku, ks = kk[:, 0], kk[:, 1]
+        u = jax.vmap(lambda k: jax.random.uniform(
+            k, (L,), jnp.float32, 1e-12, 1.0))(ku)
+    else:
+        ku, ks = jax.random.split(key)
+        u = jax.random.uniform(ku, (B, L), jnp.float32, 1e-12, 1.0)
 
     q_tok = jnp.take_along_axis(q_hat, draft_tokens[..., None],
                                 axis=-1)[..., 0]          # (B, L)
@@ -55,7 +69,11 @@ def verify(key, draft_tokens, q_hat, p_dists, live=None) -> VerifyResult:
     rs = residual.sum(-1, keepdims=True)
     residual = jnp.where(rs > 1e-30, residual / jnp.maximum(rs, 1e-30), p_T)
     dist = jnp.where(rejected[:, None], residual, p_T)
-    new_token = jax.random.categorical(ks, jnp.log(jnp.maximum(dist, 1e-30)))
+    logp = jnp.log(jnp.maximum(dist, 1e-30))
+    if per_row:
+        new_token = jax.vmap(jax.random.categorical)(ks, logp)
+    else:
+        new_token = jax.random.categorical(ks, logp)
     return VerifyResult(n_accept, new_token.astype(jnp.int32), rejected,
                         prefix.astype(jnp.bool_))
 

@@ -1,11 +1,21 @@
 """Edge-cloud SQS-SD serving driver.
 
-Loads (or random-inits) a draft/target pair, runs batched speculative
-decoding with the chosen compression method over the modeled uplink, and
-prints the paper's metrics (latency breakdown, resampling rate, bits).
+Loads (or random-inits) a draft/target pair and runs one of two modes:
+
+Fixed-batch mode (default): batched speculative decoding with the chosen
+compression method over the modeled uplink; prints the paper's metrics
+(latency breakdown, resampling rate, bits).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --method csqs --rounds 20 --batch 4
+
+Trace mode (--trace): replays a seeded Poisson arrival trace through the
+continuous-batching scheduler (repro.serve) with the shared contended
+uplink, and reports throughput, per-request latency percentiles and the
+admission rejection rate.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --method csqs --trace --rate 4 --n-requests 16 --max-batch 4
 """
 from __future__ import annotations
 
@@ -20,6 +30,8 @@ from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig, summarize
 from repro.core.channel import ChannelConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params
+from repro.serve import (ServeConfig, ServeSession, TraceConfig,
+                         poisson_trace)
 from repro.train import checkpoint
 
 
@@ -54,6 +66,23 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="")
+    # --- trace (continuous-batching) mode ---
+    ap.add_argument("--trace", action="store_true",
+                    help="replay a Poisson arrival trace through the "
+                         "continuous-batching scheduler")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="trace mode: mean arrival rate (requests/s)")
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=32)
+    ap.add_argument("--min-new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="trace mode: engine slots")
+    ap.add_argument("--queue-cap", type=int, default=64,
+                    help="trace mode: waiting-room size before rejecting")
+    ap.add_argument("--policy", default="continuous",
+                    choices=["continuous", "static"])
+    ap.add_argument("--cache-len", type=int, default=0,
+                    help="per-slot cache capacity (0 = auto)")
     args = ap.parse_args()
 
     tc = configs.get_config(args.arch)
@@ -63,9 +92,6 @@ def main():
     tp = load_or_init(tc, args.target_ckpt, args.seed + 1)
     dp = load_or_init(dc, args.draft_ckpt, args.seed + 2)
 
-    data = SyntheticLM(DataConfig(vocab=tc.vocab, seed=77))
-    prompts = data.sample(args.batch, args.prompt_len)[:, :-1]
-
     eng = EdgeCloudEngine(
         dc, dp, tc, tp,
         MethodConfig(args.method, K=args.K, ell=args.ell, alpha=args.alpha,
@@ -74,6 +100,36 @@ def main():
                      temperature=args.temperature),
         ChannelConfig(uplink_bps=args.uplink_bps),
         seed=args.seed)
+
+    if args.trace:
+        cache_len = args.cache_len or (
+            args.prompt_len + args.max_new_tokens + args.L_max + 8)
+        trace = poisson_trace(TraceConfig(
+            n_requests=args.n_requests, rate_rps=args.rate,
+            prompt_len=args.prompt_len,
+            min_new_tokens=args.min_new_tokens,
+            max_new_tokens=args.max_new_tokens,
+            vocab=tc.vocab, seed=args.seed))
+        sess = ServeSession(eng, ServeConfig(
+            max_batch=args.max_batch, queue_cap=args.queue_cap,
+            policy=args.policy, cache_len=cache_len))
+        rep = sess.run_trace(trace)
+        print(f"[serve --trace] {tc.name} <- {dc.name}  "
+              f"method={args.method} policy={args.policy} "
+              f"rate={args.rate}/s slots={args.max_batch}")
+        for k, v in rep.summary().items():
+            if isinstance(v, float):
+                print(f"  {k:24s} {v:.6g}")
+            else:
+                print(f"  {k:24s} {v}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"report": rep.summary(), "args": vars(args)},
+                          f, indent=1)
+        return
+
+    data = SyntheticLM(DataConfig(vocab=tc.vocab, seed=77))
+    prompts = data.sample(args.batch, args.prompt_len)[:, :-1]
     rounds, tokens = eng.run(prompts, args.rounds)
     s = summarize(rounds)
     print(f"[serve] {tc.name} <- {dc.name}  method={args.method}")

@@ -181,8 +181,11 @@ def forward_logits(cfg: ModelConfig, params, tokens, positions=None,
     if cfg.n_prefix_layers:
         x, _ = _prefix_apply(cfg, params, x, mode="train",
                              positions=positions)
+    # dropless MoE: the oracle must reproduce the serve path, whose
+    # inference-mode routing never drops tokens (moe.moe_apply)
     x, _, _ = tfm.apply_body(cfg, params["body"], x, mode="train",
-                             positions=positions, enc_out=enc_out)
+                             positions=positions, enc_out=enc_out,
+                             moe_dropless=True)
     return _head(cfg, params, x).astype(jnp.float32)
 
 

@@ -51,8 +51,19 @@ def capacity(cfg: ModelConfig, n_tokens: int) -> int:
 GROUPS = 1
 
 
-def moe_apply(cfg: ModelConfig, p, x):
+def moe_apply(cfg: ModelConfig, p, x, dropless: bool = False):
     """x: (B, S, D) -> (y, aux_loss).
+
+    ``dropless=True`` (inference) sets per-expert capacity to T (top_k
+    experts are distinct, so one expert receives at most T assignments)
+    and no token is ever dropped: serve-path outputs (prefill/decode/
+    extend) then agree with the teacher-forced oracle regardless of batch
+    composition — capacity dropping is a *training* regulariser, not an
+    inference semantic.  Cost: the dispatch buffer is provisioned for the
+    worst case, (E, T+1, D) vs (E, ~T·k·cf/E, D) on the capacity path —
+    cheap at decode (T = B·L) but ~E/(cf·k)× the expert compute at
+    long-prompt prefill; a sort/segment dropless dispatch is the known
+    fix if that ever dominates (ROADMAP).
 
     Distributed path (§Perf H3b): GSPMD cannot partition the batched
     dispatch scatter (it all-gathers the token stream: 40 GiB/layer on
@@ -69,13 +80,13 @@ def moe_apply(cfg: ModelConfig, p, x):
         # shard_map needs the batch divisible by the dp degree; tiny
         # decode batches (long_500k B=1) take the GSPMD path instead
         if x.shape[0] % dp_size == 0:
-            return _moe_shard_map(cfg, p, x)
+            return _moe_shard_map(cfg, p, x, dropless)
     B, S, D = x.shape
-    y, aux = _moe_tokens(cfg, p, x.reshape(B * S, D))
+    y, aux = _moe_tokens(cfg, p, x.reshape(B * S, D), dropless=dropless)
     return y.reshape(B, S, D), aux
 
 
-def _moe_shard_map(cfg: ModelConfig, p, x):
+def _moe_shard_map(cfg: ModelConfig, p, x, dropless: bool = False):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.sharding import act_sharding
@@ -114,7 +125,7 @@ def _moe_shard_map(cfg: ModelConfig, p, x):
         Bl, Sl, Dl = xl.shape
         xf = xl.reshape(Bl * Sl, Dl)
         y, aux = _moe_tokens(cfg, pl, xf, expert_offset_axis=axes.model
-                             if e_sharded else None)
+                             if e_sharded else None, dropless=dropless)
         # partial contributions: experts (e_sharded) or FFN slices — one
         # all-reduce over the model axis either way
         y = jax.lax.psum(y, axes.model)
@@ -130,18 +141,23 @@ def _moe_shard_map(cfg: ModelConfig, p, x):
                    *(("shared",) if "shared" in p else ()))})
 
 
-def _moe_tokens(cfg: ModelConfig, p, xf, expert_offset_axis=None):
+def _moe_tokens(cfg: ModelConfig, p, xf, expert_offset_axis=None,
+                dropless: bool = False):
     """xf: (T, D) tokens of ONE dispatch group.
 
     expert_offset_axis: inside shard_map with expert-sharded weights, this
     names the mesh axis whose index selects the local expert slice; tokens
     routed to other shards' experts are masked out (their contribution
-    comes from those shards' psum terms)."""
+    comes from those shards' psum terms).
+
+    dropless: capacity = T — the k experts of one token are distinct
+    (top_k), so no expert ever receives more than T assignments; the
+    inference path, see moe_apply."""
     dt = xf.dtype
     T, D = xf.shape
     k = cfg.moe_top_k
     E = cfg.n_experts
-    C = capacity(cfg, T)
+    C = T if dropless else capacity(cfg, T)
 
     logits = (xf.astype(jnp.float32)
               @ p["router"].astype(jnp.float32))          # (T, E)

@@ -65,7 +65,8 @@ def init_block_cache(cfg: ModelConfig, block_type: str, batch: int,
 
 def apply_block(cfg: ModelConfig, p, x, block_type: str, ffn_type: str, *,
                 mode: str, positions, cache=None, pos=None, enc_out=None,
-                cross_kv=None, enc_valid=None, collect_traj: bool = False):
+                cross_kv=None, enc_valid=None, collect_traj: bool = False,
+                moe_dropless=None):
     """Returns (x, aux_loss, new_cache, state_traj).
 
     ``state_traj`` (only when collect_traj and the block carries sequential
@@ -140,7 +141,10 @@ def apply_block(cfg: ModelConfig, p, x, block_type: str, ffn_type: str, *,
         x = x + mlp_apply(p["mlp"], h2)
     elif ffn_type == "moe":
         h2 = rmsnorm(x, p["norm2"], cfg.rms_eps)
-        y, aux = moe_mod.moe_apply(cfg, p["moe"], h2)
+        if moe_dropless is None:
+            moe_dropless = mode != "train"
+        y, aux = moe_mod.moe_apply(cfg, p["moe"], h2,
+                                   dropless=moe_dropless)
         x = x + y
     return x, aux, new_cache, traj
 
@@ -182,7 +186,8 @@ def init_body_cache(cfg: ModelConfig, batch: int, seq: int, dtype,
 
 def apply_body(cfg: ModelConfig, body_p, x, *, mode, positions, caches=None,
                pos=None, enc_out=None, cross_kvs=None, enc_valid=None,
-               remat: bool = False, collect_traj: bool = False):
+               remat: bool = False, collect_traj: bool = False,
+               moe_dropless=None):
     """Scan the periodic body.  Returns (x, aux_sum, new_caches[, trajs]).
 
     Decode/extend can be UNROLLED (REPRO_UNROLL_DECODE=1): a scan forces
@@ -210,7 +215,8 @@ def apply_body(cfg: ModelConfig, body_p, x, *, mode, positions, caches=None,
                 cfg, per_p[f"p{i}"], x, cfg.block_pattern[i],
                 cfg.ffn_pattern[i], mode=mode, positions=positions,
                 cache=ck, pos=pos, enc_out=enc_out, cross_kv=cx,
-                enc_valid=enc_valid, collect_traj=collect_traj)
+                enc_valid=enc_valid, collect_traj=collect_traj,
+                moe_dropless=moe_dropless)
             aux_tot = aux_tot + aux
             new_caches[f"p{i}"] = nc
             trajs[f"p{i}"] = tj

@@ -1,0 +1,130 @@
+"""Admission/eviction scheduler: packs requests into engine slots.
+
+Two policies:
+
+  continuous  (default) — every free slot is refilled from the FIFO
+              waiting queue at every scheduling tick: requests join and
+              leave the SD batch mid-flight (continuous batching, the
+              Orca/vLLM discipline).
+  static      — slots are only refilled when the WHOLE batch has
+              drained: classic static batching, kept as the baseline
+              the serve_load benchmark compares against.
+
+Admission control: the waiting room holds at most ``queue_cap``
+requests; arrivals beyond that are rejected (the per-method rejection
+rate the paper-level load study reports).
+
+Invariants (asserted by ``check_invariants`` and the scheduler tests):
+  * a slot holds at most one ACTIVE request, and every ACTIVE request
+    holds exactly one slot;
+  * len(active) <= max_batch, len(waiting) <= queue_cap;
+  * requests never skip states (QUEUED -> ACTIVE -> FINISHED, or
+    QUEUED -> REJECTED on arrival only).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.serve.request import Request, RequestState
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int = 4          # engine slots
+    queue_cap: int = 64         # waiting-room size; beyond this -> reject
+    policy: str = "continuous"  # continuous | static
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        assert cfg.policy in ("continuous", "static"), cfg.policy
+        self.cfg = cfg
+        self.waiting: collections.deque = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.max_batch
+        self.finished: List[Request] = []
+        self.rejected: List[Request] = []
+
+    # -- queries --------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    @property
+    def active_requests(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def has_work(self) -> bool:
+        return self.n_active > 0 or len(self.waiting) > 0
+
+    # -- transitions ----------------------------------------------------
+    def reject(self, req: Request):
+        """Turn away an arrival (queue full, or it can never fit a
+        slot)."""
+        assert req.state == RequestState.QUEUED
+        req.state = RequestState.REJECTED
+        self.rejected.append(req)
+
+    def submit(self, req: Request, now: float) -> bool:
+        """Arrival.  Returns False (and marks REJECTED) when the waiting
+        room is full."""
+        assert req.state == RequestState.QUEUED
+        if len(self.waiting) >= self.cfg.queue_cap:
+            self.reject(req)
+            return False
+        self.waiting.append(req)
+        return True
+
+    def schedule(self, now: float) -> List[Tuple[int, Request]]:
+        """One scheduling tick: admit waiting requests into free slots
+        according to the policy.  Returns (slot, request) admissions; the
+        session must prefill each admitted request into its slot."""
+        if self.cfg.policy == "static" and self.n_active > 0:
+            return []          # batch barrier: drain before refilling
+        admissions = []
+        for slot in self.free_slots:
+            if not self.waiting:
+                break
+            req = self.waiting.popleft()
+            req.state = RequestState.ACTIVE
+            req.slot = slot
+            req.t_admit = now
+            self.slots[slot] = req
+            admissions.append((slot, req))
+        return admissions
+
+    def complete(self, req: Request, now: float) -> int:
+        """Eviction on completion: frees the slot.  Returns the slot id
+        so the session can release the engine side."""
+        assert req.state == RequestState.ACTIVE and req.slot is not None
+        assert self.slots[req.slot] is req
+        slot = req.slot
+        self.slots[slot] = None
+        req.state = RequestState.FINISHED
+        req.t_finish = now
+        self.finished.append(req)
+        return slot
+
+    # -- invariants ------------------------------------------------------
+    def check_invariants(self):
+        assert len(self.slots) == self.cfg.max_batch
+        assert len(self.waiting) <= self.cfg.queue_cap
+        seen = set()
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            assert req.state == RequestState.ACTIVE
+            assert req.slot == slot, (req.rid, req.slot, slot)
+            assert req.rid not in seen
+            seen.add(req.rid)
+        for req in self.waiting:
+            assert req.state == RequestState.QUEUED and req.slot is None
+        for req in self.finished:
+            assert req.state == RequestState.FINISHED
+        for req in self.rejected:
+            assert req.state == RequestState.REJECTED

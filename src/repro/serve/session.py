@@ -1,0 +1,207 @@
+"""Continuous-batching serving loop over the slot-level engine API.
+
+``ServeSession`` owns the virtual serving clock.  Per iteration:
+
+  1. release arrivals whose t_arrival <= now into the scheduler
+     (admission control may reject);
+  2. scheduling tick: admitted requests are prefilled into engine slots
+     (continuous policy refills mid-flight; static waits for the batch
+     to drain);
+  3. one SD round over the active slots;
+  4. clock accounting: edge drafting runs in parallel on every edge
+     device (max t_slm), then each live request's payload queues FIFO on
+     the SHARED uplink (core.channel.SharedUplink) — per-request
+     head-of-line waits are charged to the request — then one batched
+     cloud verify + the downlink feedback broadcast;
+  5. EOS/length completions are evicted, freeing their slots for the
+     next tick.
+
+When no request is active the clock jumps to the next arrival (the
+server idles).  The loop ends when the trace is drained.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import channel as channel_mod
+from repro.core.engine import EdgeCloudEngine
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 4
+    queue_cap: int = 64
+    policy: str = "continuous"      # continuous | static
+    cache_len: int = 256            # per-slot KV/SSM capacity
+    max_rounds: int = 100_000       # safety valve for the replay loop
+    # Fixed per-round compute costs for the serving clock (seconds).
+    # None: use the engine's measured wall-clock per round.  Setting both
+    # turns the replay into a deterministic discrete-event simulation —
+    # required when COMPARING scheduler policies, where host timing noise
+    # would otherwise dominate the makespan difference.
+    t_slm_s: Optional[float] = None
+    t_llm_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ServeReport:
+    policy: str
+    n_requests: int
+    n_finished: int
+    n_rejected: int
+    makespan_s: float
+    total_tokens: int
+    throughput_tok_s: float
+    latency_p50_s: float
+    latency_p90_s: float
+    latency_p99_s: float
+    ttft_mean_s: float
+    queue_wait_mean_s: float
+    uplink_wait_mean_s: float
+    uplink_utilization: float
+    rejection_rate: float
+    n_rounds: int
+    requests: List[Request] = dataclasses.field(default_factory=list,
+                                                repr=False)
+
+    def summary(self) -> Dict[str, float]:
+        # not asdict(): that would deep-copy every Request (prompt
+        # arrays, token lists) just to drop them
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self) if f.name != "requests"}
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs \
+        else float("nan")
+
+
+class ServeSession:
+    def __init__(self, engine: EdgeCloudEngine, cfg: ServeConfig):
+        self.engine = engine
+        self.cfg = cfg
+        self.sched = Scheduler(SchedulerConfig(
+            max_batch=cfg.max_batch, queue_cap=cfg.queue_cap,
+            policy=cfg.policy))
+        self.uplink = channel_mod.SharedUplink(engine.ch)
+        self.now = 0.0
+        self.n_rounds = 0
+        engine.init_slots(cfg.max_batch, cfg.cache_len)
+
+    # ------------------------------------------------------------------
+    def _cache_need(self, req: Request) -> int:
+        """Worst-case slot-cache footprint: prompt + generated tokens +
+        one full draft window beyond the last accepted position."""
+        return (int(req.prompt.shape[0]) + req.max_new_tokens
+                + self.engine.e.L_max + 1)
+
+    def _admit_arrivals(self, pending: List[Request]):
+        """Move trace arrivals with t_arrival <= now into the scheduler.
+        A request that could never fit a slot cache is REJECTED at
+        arrival — one bad request must not abort the replay for everyone
+        else."""
+        while pending and pending[0].t_arrival <= self.now:
+            req = pending.pop(0)
+            if self._cache_need(req) > self.cfg.cache_len:
+                self.sched.reject(req)
+                continue
+            self.sched.submit(req, self.now)
+
+    def _schedule_tick(self):
+        for slot, req in self.sched.schedule(self.now):
+            assert self._cache_need(req) <= self.cfg.cache_len, \
+                f"request {req.rid} exceeds cache_len " \
+                f"{self.cfg.cache_len}"
+            self.engine.admit_slot(slot, req.prompt, req.seed)
+
+    def _step_round(self):
+        """One SD round + clock accounting.  Returns finished requests."""
+        eng, sched = self.engine, self.sched
+        m = eng.run_round()
+        self.n_rounds += 1
+
+        # --- clock: parallel edge drafting, contended uplink, batched
+        # cloud verify, downlink feedback broadcast ---
+        t_slm = self.cfg.t_slm_s if self.cfg.t_slm_s is not None \
+            else m["t_slm"]
+        t_llm = self.cfg.t_llm_s if self.cfg.t_llm_s is not None \
+            else m["t_llm"]
+        edge_done = self.now + t_slm
+        arrive = edge_done
+        for req in sched.active_requests:
+            # bits_row is the paper's complete per-round payload;
+            # gap_bits_row is an ALTERNATIVE subset encoding of the same
+            # payload (bits.py) — transmit one, never the sum
+            payload = float(m["bits_row"][req.slot])
+            tx = self.uplink.transmit(edge_done, payload)
+            req.uplink_wait_s += tx.wait_s
+            arrive = max(arrive, tx.arrive_s)
+        t_down = channel_mod.downlink_time(
+            eng.ch, channel_mod.feedback_bits(eng.e.L_max, eng.V))
+        self.now = arrive + t_llm + t_down
+
+        # --- token delivery + completion ---
+        finished = []
+        for req in list(sched.active_requests):
+            req.n_rounds += 1
+            if req.add_tokens(m["emitted"][req.slot], self.now):
+                slot = sched.complete(req, self.now)
+                eng.release_slot(slot)
+                finished.append(req)
+        return finished
+
+    # ------------------------------------------------------------------
+    def run_trace(self, trace: List[Request]) -> ServeReport:
+        """Replay an arrival trace to completion and report."""
+        pending = sorted(trace, key=lambda r: r.t_arrival)
+        n_total = len(pending)
+        while True:
+            self._admit_arrivals(pending)
+            self._schedule_tick()
+            self.sched.check_invariants()
+            if self.sched.n_active == 0:
+                if pending:                    # idle: jump to next arrival
+                    self.now = max(self.now, pending[0].t_arrival)
+                    continue
+                break                          # trace drained
+            self._step_round()
+            if self.n_rounds >= self.cfg.max_rounds:
+                raise RuntimeError("serve loop exceeded max_rounds — "
+                                   "request(s) not terminating?")
+        return self._report(n_total)
+
+    # ------------------------------------------------------------------
+    def _report(self, n_total: int) -> ServeReport:
+        fin = self.sched.finished
+        lats = [r.latency_s for r in fin]
+        toks = sum(r.n_tokens for r in fin)
+        mk = self.now
+        return ServeReport(
+            policy=self.cfg.policy,
+            n_requests=n_total,
+            n_finished=len(fin),
+            n_rejected=len(self.sched.rejected),
+            makespan_s=mk,
+            total_tokens=toks,
+            throughput_tok_s=toks / mk if mk > 0 else 0.0,
+            latency_p50_s=_percentile(lats, 50),
+            latency_p90_s=_percentile(lats, 90),
+            latency_p99_s=_percentile(lats, 99),
+            ttft_mean_s=float(np.mean([r.ttft_s for r in fin]))
+            if fin else float("nan"),
+            queue_wait_mean_s=float(np.mean([r.queue_wait_s
+                                             for r in fin]))
+            if fin else float("nan"),
+            uplink_wait_mean_s=float(np.mean([r.uplink_wait_s
+                                              for r in fin]))
+            if fin else float("nan"),
+            uplink_utilization=self.uplink.utilization(mk),
+            rejection_rate=len(self.sched.rejected) / max(n_total, 1),
+            n_rounds=self.n_rounds,
+            requests=self.sched.finished + self.sched.rejected,
+        )

@@ -1,0 +1,49 @@
+"""Poisson arrival traces for the serving driver and load benchmark.
+
+Arrivals are a homogeneous Poisson process (exponential interarrivals at
+``rate_rps``); prompts come from the SyntheticLM corpus so the draft and
+target models see in-distribution text; per-request generation lengths
+are uniform in [min_new_tokens, max_new_tokens].  Everything is seeded:
+the same TraceConfig always yields the same workload, so continuous and
+static batching are compared on identical arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.serve.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    n_requests: int = 16
+    rate_rps: float = 2.0           # mean arrival rate (requests/s)
+    prompt_len: int = 12            # fixed → one prefill compile
+    min_new_tokens: int = 8
+    max_new_tokens: int = 32
+    vocab: int = 512
+    eos_id: Optional[int] = None    # None: length-only termination
+    seed: int = 0
+
+
+def poisson_trace(cfg: TraceConfig) -> List[Request]:
+    rng = np.random.default_rng(cfg.seed)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seed=cfg.seed + 101))
+    gaps = rng.exponential(1.0 / max(cfg.rate_rps, 1e-9), cfg.n_requests)
+    arrivals = np.cumsum(gaps)
+    prompts = data.sample(cfg.n_requests, cfg.prompt_len)[:, :-1]
+    lens = rng.integers(cfg.min_new_tokens, cfg.max_new_tokens + 1,
+                        cfg.n_requests)
+    return [
+        Request(rid=i,
+                prompt=prompts[i].astype(np.int32),
+                t_arrival=float(arrivals[i]),
+                max_new_tokens=int(lens[i]),
+                eos_id=cfg.eos_id,
+                seed=cfg.seed + 1000 + i)
+        for i in range(cfg.n_requests)
+    ]

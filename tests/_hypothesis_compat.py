@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+``hypothesis`` is a declared test dependency (``pip install -e .[test]``)
+and CI always has it, but the suite must still COLLECT and run its
+example-based tests on minimal environments.  Importing ``given`` /
+``settings`` / ``st`` from here instead of from hypothesis makes the
+property-based cases skip (not crash collection) when the package is
+absent.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:        # degrade: skip property-based cases
+    HAVE_HYPOTHESIS = False
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed — property-based case; "
+                       "pip install -e .[test]")(fn)
+        return deco
+
+    class _Strategies:
+        """Stands in for hypothesis.strategies; every strategy call
+        returns None (the test body never runs when skipped)."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _Strategies()

@@ -1,7 +1,7 @@
 """C-SQS conformal controller: Theorem 2, Lemma 4, backtracking."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import conformal
 from repro.core.sqs import sparsify_threshold, softmax_temp

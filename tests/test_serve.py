@@ -1,0 +1,208 @@
+"""Serving-layer tests: scheduler invariants, masked-batch equivalence,
+per-request β isolation, shared-uplink contention.
+
+The equivalence test is the load-bearing one: a request decoded inside a
+continuous batch (joining mid-flight, sharing slots with strangers) must
+emit EXACTLY the token stream of a solo EdgeCloudEngine run with the same
+seed — per-request RNG streams, per-slot β state and masked rollback make
+this hold bit-for-bit on a fixed backend."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig
+from repro.core.channel import ChannelConfig, SharedUplink
+from repro.models import init_params
+from repro.serve import (Request, RequestState, Scheduler, SchedulerConfig,
+                         ServeConfig, ServeSession, TraceConfig,
+                         poisson_trace)
+
+L_MAX = 3
+METHOD = MethodConfig("csqs", alpha=5e-3, eta=5e-2)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    tc = configs.smoke_variant(configs.get_config("qwen2.5-3b"))
+    dc = configs.draft_variant(tc, 2)
+    tp = init_params(tc, jax.random.PRNGKey(1))
+    dp = init_params(dc, jax.random.PRNGKey(2))
+    return dc, dp, tc, tp
+
+
+def _engine(pair, seed=0):
+    dc, dp, tc, tp = pair
+    return EdgeCloudEngine(dc, dp, tc, tp, METHOD,
+                           EngineConfig(L_max=L_MAX), seed=seed)
+
+
+def _req(rid, t=0.0, n=8, prompt_len=10, vocab=512, seed=None):
+    rng = np.random.default_rng(100 + rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(0, vocab, prompt_len,
+                                       dtype=np.int32),
+                   t_arrival=t, max_new_tokens=n,
+                   seed=seed if seed is not None else 100 + rid)
+
+
+# ----------------------------------------------------------------------
+# Scheduler (pure python, no models)
+# ----------------------------------------------------------------------
+def test_scheduler_admission_eviction_invariants():
+    sched = Scheduler(SchedulerConfig(max_batch=2, queue_cap=3))
+    reqs = [_req(i, t=float(i)) for i in range(7)]
+    assert all(sched.submit(r, 0.0) for r in reqs[:3])
+    assert not sched.submit(reqs[3], 0.0)   # waiting room full pre-tick
+    assert reqs[3].state == RequestState.REJECTED
+    adm = sched.schedule(0.0)
+    sched.check_invariants()
+    assert [s for s, _ in adm] == [0, 1]    # FIFO into the free slots
+    assert sched.n_active == 2 and len(sched.waiting) == 1
+    # slots full: room in the queue again, but no slot refill
+    assert sched.submit(reqs[4], 1.0) and sched.submit(reqs[5], 1.0)
+    assert not sched.submit(reqs[6], 1.0)   # queue full again
+    assert sched.schedule(1.0) == []
+    # evict slot 1 -> exactly one admission, into slot 1, FIFO order
+    slot = sched.complete(sched.slots[1], 2.0)
+    assert slot == 1
+    adm = sched.schedule(2.0)
+    sched.check_invariants()
+    assert len(adm) == 1 and adm[0][0] == 1 and adm[0][1].rid == 2
+    assert sched.slots[1].t_admit == 2.0
+    # drain everything
+    now = 3.0
+    while sched.has_work():
+        for r in list(sched.active_requests):
+            sched.complete(r, now)
+        sched.schedule(now)
+        sched.check_invariants()
+        now += 1.0
+    assert len(sched.finished) == 5 and len(sched.rejected) == 2
+    assert all(r.latency_s is not None for r in sched.finished)
+
+
+def test_scheduler_static_policy_barrier():
+    sched = Scheduler(SchedulerConfig(max_batch=2, queue_cap=8,
+                                      policy="static"))
+    for i in range(4):
+        sched.submit(_req(i), 0.0)
+    assert len(sched.schedule(0.0)) == 2
+    sched.complete(sched.slots[0], 1.0)
+    # static: one free slot is NOT refilled while the batch drains
+    assert sched.schedule(1.0) == []
+    sched.complete(sched.slots[1], 2.0)
+    assert len(sched.schedule(2.0)) == 2
+    sched.check_invariants()
+
+
+def test_shared_uplink_fifo_contention():
+    ch = ChannelConfig(uplink_bps=1000.0, per_msg_overhead_bits=0.0,
+                       rtt_s=0.02)
+    link = SharedUplink(ch)
+    a = link.transmit(0.0, 1000.0)       # 1 s serialisation
+    b = link.transmit(0.0, 500.0)        # queues behind a
+    assert a.start_s == 0.0 and a.end_s == 1.0 and a.wait_s == 0.0
+    assert b.start_s == 1.0 and b.end_s == 1.5 and b.wait_s == 1.0
+    assert b.arrive_s == pytest.approx(1.5 + 0.01)
+    c = link.transmit(5.0, 1000.0)       # link idle again
+    assert c.start_s == 5.0 and c.wait_s == 0.0
+    assert link.utilization(6.0) == pytest.approx(2.5 / 6.0)
+
+
+# ----------------------------------------------------------------------
+# Engine-in-the-loop (smoke pair)
+# ----------------------------------------------------------------------
+def test_masked_batch_equivalence(pair):
+    """Requests served in a shared continuous batch emit the same tokens
+    as solo single-request engine runs with the same per-request seed."""
+    dc, dp, tc, tp = pair
+    trace = poisson_trace(TraceConfig(
+        n_requests=4, rate_rps=6.0, prompt_len=10, min_new_tokens=4,
+        max_new_tokens=9, vocab=tc.vocab, seed=3))
+    sess = ServeSession(_engine(pair), ServeConfig(max_batch=2,
+                                                   cache_len=64))
+    rep = sess.run_trace(trace)
+    assert rep.n_finished == 4 and rep.n_rejected == 0
+    for req in rep.requests:
+        assert req.n_tokens == req.max_new_tokens
+        solo = EdgeCloudEngine(dc, dp, tc, tp, METHOD,
+                               EngineConfig(L_max=L_MAX), seed=req.seed)
+        solo.prefill(jnp.asarray(req.prompt)[None])
+        while len(solo.out_tokens[0]) < req.n_tokens:
+            solo.run_round()
+        assert solo.out_tokens[0][:req.n_tokens] == req.tokens, \
+            f"request {req.rid} diverged from its solo run"
+
+
+def test_csqs_beta_per_request_isolation(pair):
+    """Admitting a request into a freed slot resets that slot's β to β₀
+    and leaves every other in-flight request's threshold untouched."""
+    eng = _engine(pair)
+    eng.init_slots(3, 64)
+    r0, r1 = _req(0), _req(1)
+    eng.admit_slot(0, r0.prompt, r0.seed)
+    eng.admit_slot(1, r1.prompt, r1.seed)
+    for _ in range(3):
+        eng.run_round()
+    beta_before = np.asarray(eng.beta).copy()
+    assert beta_before[0] != pytest.approx(METHOD.beta0) or \
+        beta_before[1] != pytest.approx(METHOD.beta0)  # β moved
+    r2 = _req(2)
+    eng.admit_slot(2, r2.prompt, r2.seed)              # join mid-flight
+    beta_after = np.asarray(eng.beta)
+    assert beta_after[0] == beta_before[0]
+    assert beta_after[1] == beta_before[1]
+    assert beta_after[2] == pytest.approx(METHOD.beta0)
+    # a round with the newcomer still only moves per-row state
+    eng.run_round()
+    assert eng.active.all()
+    # release + re-admit restarts the controller for the slot
+    eng.release_slot(1)
+    r3 = _req(3)
+    eng.admit_slot(1, r3.prompt, r3.seed)
+    assert np.asarray(eng.beta)[1] == pytest.approx(METHOD.beta0)
+
+
+def test_inactive_slots_do_not_emit_or_transmit(pair):
+    eng = _engine(pair)
+    eng.init_slots(3, 64)
+    r0 = _req(0)
+    eng.admit_slot(1, r0.prompt, r0.seed)              # only slot 1 live
+    m = eng.run_round()
+    assert m["active"].tolist() == [False, True, False]
+    assert m["emitted"][0] == [] and m["emitted"][2] == []
+    assert len(m["emitted"][1]) >= 1
+    assert m["bits_row"][0] == 0.0 and m["bits_row"][2] == 0.0
+    assert m["bits_row"][1] > 0.0
+    assert m["tokens_out"][0] == 0 and m["tokens_out"][2] == 0
+
+
+def test_oversized_request_rejected_not_fatal(pair):
+    """A request whose prompt + generation budget can never fit a slot
+    cache is rejected at arrival; the replay continues for everyone
+    else."""
+    dc, dp, tc, tp = pair
+    reqs = [_req(0, t=0.0, n=4), _req(1, t=0.1, n=500), _req(2, t=0.2, n=4)]
+    sess = ServeSession(_engine(pair), ServeConfig(max_batch=2,
+                                                   cache_len=64))
+    rep = sess.run_trace(reqs)
+    assert rep.n_rejected == 1 and rep.n_finished == 2
+    assert reqs[1].state == RequestState.REJECTED
+    assert reqs[0].state == reqs[2].state == RequestState.FINISHED
+
+
+def test_high_load_rejects_and_still_completes(pair):
+    dc, dp, tc, tp = pair
+    trace = poisson_trace(TraceConfig(
+        n_requests=6, rate_rps=1000.0, prompt_len=8, min_new_tokens=3,
+        max_new_tokens=6, vocab=tc.vocab, seed=5))
+    sess = ServeSession(_engine(pair), ServeConfig(
+        max_batch=1, queue_cap=2, cache_len=64))
+    rep = sess.run_trace(trace)
+    assert rep.n_rejected >= 1                          # admission control
+    assert rep.n_finished == rep.n_requests - rep.n_rejected
+    assert rep.rejection_rate == rep.n_rejected / rep.n_requests
+    assert rep.throughput_tok_s > 0
+    assert rep.latency_p99_s >= rep.latency_p50_s

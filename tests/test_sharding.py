@@ -138,8 +138,8 @@ from repro.models import moe as moe_mod
 from repro.models.moe import init_moe, moe_apply
 from repro.sharding import act_sharding
 from repro.sharding.partition import MeshAxes
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_debug_mesh
+mesh = make_debug_mesh(2, 4)
 for E in (8, 6):
     cfg = dataclasses.replace(
         configs.smoke_variant(configs.get_config("qwen2-moe-a2.7b")),
