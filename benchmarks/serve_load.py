@@ -1,12 +1,26 @@
-"""Serving-layer load study: continuous vs static batching.
+"""Serving-layer load study: batching policies and KV memory layouts.
 
-Replays the SAME seeded Poisson arrival trace through both scheduler
-policies at several arrival rates and compares throughput (tokens/s over
-the virtual serving clock), latency percentiles and rejection rate.
-Continuous batching refills engine slots the moment a request completes;
-static batching drains the whole batch first — at high load the idle
-slots cost static batching real throughput, which is the effect this
-benchmark quantifies.
+Two studies over the SAME seeded Poisson arrival traces, on the same
+deterministic discrete-event clock (calibrated fixed per-round compute
+costs — host timing noise must not decide a scheduler comparison):
+
+  policy  continuous vs static batching across arrival rates: continuous
+          refills engine slots the moment a request completes; static
+          drains the whole batch first and pays for the idle slots at
+          high load.
+
+  paged   paged KV pool vs dense per-slot caches under the SAME KV
+          memory budget (dense_slots x cache_len positions per layer).
+          Dense caches reserve the worst case for every slot, so the
+          budget backs only ``dense_slots`` concurrent requests; the
+          page pool holds each request's ACTUAL length, so the same
+          bytes admit more slots (preemption backstops the
+          oversubscription).  Headline: strictly more peak concurrency,
+          throughput no worse.
+
+Results go to experiments/bench/serve_load.csv and — for the perf
+trajectory CI tracks from this PR on — experiments/bench/BENCH_serve.json
+(throughput, p50/p95 latency, peak pages in use, preemptions).
 
     PYTHONPATH=src python -m benchmarks.serve_load --smoke
     PYTHONPATH=src python -m benchmarks.serve_load            # trained pair
@@ -14,6 +28,8 @@ benchmark quantifies.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 import jax
 import numpy as np
@@ -21,6 +37,7 @@ import numpy as np
 from repro import configs
 from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig
 from repro.core.channel import ChannelConfig
+from repro.core.pages import pages_for
 from repro.models import init_params
 from repro.serve import (ServeConfig, ServeSession, TraceConfig,
                          poisson_trace)
@@ -31,6 +48,8 @@ KEYS = ["policy", "rate_rps", "throughput_tok_s", "latency_p50_s",
         "latency_p99_s", "queue_wait_mean_s", "uplink_wait_mean_s",
         "uplink_utilization", "rejection_rate", "n_finished", "makespan_s"]
 
+PAGE_SIZE = 8
+
 
 def _smoke_pair(arch="qwen2.5-3b", seed=0):
     tc = configs.smoke_variant(configs.get_config(arch))
@@ -40,31 +59,20 @@ def _smoke_pair(arch="qwen2.5-3b", seed=0):
     return dc, dp, tc, tp
 
 
-def run(smoke: bool = False):
-    if smoke:
-        dc, dp, tc, tp = _smoke_pair()
-        rates = [1.0, 4.0, 16.0]
-        n_requests, max_batch = 12, 3
-        prompt_len, min_new, max_new = 10, 6, 16
-    else:
-        dc, dp, tc, tp, _ = common.trained_pair()
-        rates = [0.5, 2.0, 8.0, 32.0]
-        n_requests, max_batch = 32, 4
-        prompt_len, min_new, max_new = 12, 8, 32
-    method = MethodConfig("csqs")
-    ecfg = EngineConfig(L_max=4)
-    channel = ChannelConfig(uplink_bps=common.BENCH_UPLINK_BPS)
-    cache_len = prompt_len + max_new + ecfg.L_max + 8
-
-    # Calibrate fixed per-round compute costs (median of warm rounds) and
-    # give BOTH policies the same discrete-event clock — host timing noise
-    # must not decide a scheduler comparison.
+def _calibrate(dc, dp, tc, tp, method, ecfg, channel, max_batch,
+               prompt_len):
+    """Median warm-round compute costs -> one shared event clock."""
     cal = EdgeCloudEngine(dc, dp, tc, tp, method, ecfg, channel, seed=0)
     cal_prompts = np.zeros((max_batch, prompt_len), np.int32) + 7
     cal_rounds, _ = cal.run(cal_prompts, 5)
     t_slm = float(np.median([r["t_slm"] for r in cal_rounds[2:]]))
     t_llm = float(np.median([r["t_llm"] for r in cal_rounds[2:]]))
+    return t_slm, t_llm
 
+
+def policy_study(pair, rates, n_requests, max_batch, prompt_len, min_new,
+                 max_new, method, ecfg, channel, t_slm, t_llm, cache_len):
+    dc, dp, tc, tp = pair
     rows = []
     for rate in rates:
         trace_cfg = TraceConfig(
@@ -81,8 +89,99 @@ def run(smoke: bool = False):
             rows.append({"rate_rps": rate,
                          **{k: rep.summary()[k] for k in KEYS
                             if k != "rate_rps"}})
+    return rows
+
+
+def paged_study(pair, n_requests, dense_slots, paged_slots, prompt_len,
+                min_new, max_new, rate, method, ecfg, channel, t_slm,
+                t_llm):
+    """Paged vs contiguous at a FIXED per-layer KV memory budget of
+    dense_slots x cache_len positions."""
+    dc, dp, tc, tp = pair
+    cache_len = pages_for(prompt_len + max_new + ecfg.L_max + 1,
+                          PAGE_SIZE) * PAGE_SIZE
+    budget_tokens = dense_slots * cache_len
+    n_pages = budget_tokens // PAGE_SIZE
+    trace_cfg = TraceConfig(
+        n_requests=n_requests, rate_rps=rate, prompt_len=prompt_len,
+        min_new_tokens=min_new, max_new_tokens=max_new, vocab=tc.vocab,
+        seed=11)
+    out = {"memory_budget_tokens": budget_tokens, "page_size": PAGE_SIZE,
+           "cache_len": cache_len}
+    for layout, slots, ps in (("contiguous", dense_slots, 0),
+                              ("paged", paged_slots, PAGE_SIZE)):
+        eng = EdgeCloudEngine(dc, dp, tc, tp, method, ecfg, channel,
+                              seed=0)
+        sess = ServeSession(eng, ServeConfig(
+            max_batch=slots, cache_len=cache_len, page_size=ps,
+            n_pages=n_pages if ps else None,
+            t_slm_s=t_slm, t_llm_s=t_llm))
+        rep = sess.run_trace(poisson_trace(trace_cfg))
+        out[layout] = {
+            "max_batch": slots,
+            "throughput_tok_s": rep.throughput_tok_s,
+            "latency_p50_s": rep.latency_p50_s,
+            "latency_p95_s": rep.latency_p95_s,
+            "peak_active": rep.peak_active,
+            "peak_kv_tokens": (rep.peak_pages_in_use * PAGE_SIZE
+                               if ps else rep.peak_active * cache_len),
+            "peak_pages_in_use": rep.peak_pages_in_use,
+            "n_preempted": rep.n_preempted,
+            "n_finished": rep.n_finished,
+            "n_rejected": rep.n_rejected,
+            "makespan_s": rep.makespan_s,
+        }
+    pg, ct = out["paged"], out["contiguous"]
+    out["verdict"] = {
+        "more_concurrency": pg["peak_active"] > ct["peak_active"],
+        "throughput_ratio": pg["throughput_tok_s"]
+        / max(ct["throughput_tok_s"], 1e-9),
+        "peak_kv_ratio": pg["peak_kv_tokens"] / max(budget_tokens, 1),
+        "ok": (pg["peak_active"] > ct["peak_active"]
+               and pg["throughput_tok_s"]
+               >= 0.99 * ct["throughput_tok_s"])
+        or (pg["throughput_tok_s"] >= ct["throughput_tok_s"]
+            and pg["peak_kv_tokens"] < budget_tokens),
+    }
+    return out
+
+
+def run(smoke: bool = False):
+    if smoke:
+        pair = _smoke_pair()
+        rates = [1.0, 4.0, 16.0]
+        n_requests, max_batch = 12, 3
+        prompt_len, min_new, max_new = 10, 6, 16
+        paged_args = dict(n_requests=10, dense_slots=2, paged_slots=4,
+                          prompt_len=10, min_new=4, max_new=24, rate=16.0)
+    else:
+        dc, dp, tc, tp, _ = common.trained_pair()
+        pair = (dc, dp, tc, tp)
+        rates = [0.5, 2.0, 8.0, 32.0]
+        n_requests, max_batch = 32, 4
+        prompt_len, min_new, max_new = 12, 8, 32
+        paged_args = dict(n_requests=24, dense_slots=3, paged_slots=6,
+                          prompt_len=12, min_new=6, max_new=32, rate=32.0)
+    method = MethodConfig("csqs")
+    ecfg = EngineConfig(L_max=4)
+    channel = ChannelConfig(uplink_bps=common.BENCH_UPLINK_BPS)
+    cache_len = prompt_len + max_new + ecfg.L_max + 8
+
+    t_slm, t_llm = _calibrate(*pair, method, ecfg, channel, max_batch,
+                              prompt_len)
+    rows = policy_study(pair, rates, n_requests, max_batch, prompt_len,
+                        min_new, max_new, method, ecfg, channel, t_slm,
+                        t_llm, cache_len)
+    paged = paged_study(pair, method=method, ecfg=ecfg, channel=channel,
+                        t_slm=t_slm, t_llm=t_llm, **paged_args)
     path = common.emit_csv("serve_load", rows, KEYS)
-    return rows, path
+    jpath = os.path.join(os.path.dirname(path), "BENCH_serve.json")
+    with open(jpath, "w") as f:
+        json.dump({"schema": "BENCH_serve/v1", "smoke": smoke,
+                   "t_slm_s": t_slm, "t_llm_s": t_llm,
+                   "policy_study": rows, "paged_study": paged}, f,
+                  indent=2)
+    return rows, paged, path, jpath
 
 
 def main():
@@ -90,14 +189,14 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="random-init smoke pair, reduced grid")
     args = ap.parse_args()
-    rows, path = run(smoke=args.smoke)
+    rows, paged, path, jpath = run(smoke=args.smoke)
     for r in rows:
         print(f"{r['policy']:10s} rate={r['rate_rps']:5.1f}/s "
               f"tok/s={r['throughput_tok_s']:7.2f} "
               f"p50={r['latency_p50_s']:6.3f}s "
               f"p99={r['latency_p99_s']:6.3f}s "
               f"reject={r['rejection_rate']:.2f}")
-    # headline: at the highest load, continuous must not lose to static
+    # headline 1: at the highest load, continuous must not lose to static
     hi = max(r["rate_rps"] for r in rows)
     cont = next(r for r in rows if r["rate_rps"] == hi
                 and r["policy"] == "continuous")
@@ -107,7 +206,21 @@ def main():
     verdict = "PASS" if gain >= 1.0 else "FAIL"
     print(f"[{verdict}] high-load ({hi}/s) continuous/static "
           f"throughput ratio = {gain:.2f}x")
+    # headline 2: same KV budget, paged must beat dense on concurrency
+    # without losing throughput (or beat it on peak KV at equal tput)
+    pg, ct, v = paged["paged"], paged["contiguous"], paged["verdict"]
+    print(f"paged      budget={paged['memory_budget_tokens']} tok "
+          f"({paged['page_size']}-tok pages): "
+          f"peak_active {ct['peak_active']} -> {pg['peak_active']}, "
+          f"tok/s {ct['throughput_tok_s']:.2f} -> "
+          f"{pg['throughput_tok_s']:.2f}, "
+          f"peak KV {ct['peak_kv_tokens']} -> {pg['peak_kv_tokens']} tok, "
+          f"preempted={pg['n_preempted']}")
+    print(f"[{'PASS' if v['ok'] else 'FAIL'}-PAGED] paged/contiguous: "
+          f"concurrency +{pg['peak_active'] - ct['peak_active']}, "
+          f"throughput ratio = {v['throughput_ratio']:.2f}x")
     print("->", path)
+    print("->", jpath)
 
 
 if __name__ == "__main__":

@@ -7,3 +7,4 @@ from repro.core.verify import acceptance_prob, VerifyResult
 from repro.core.engine import (EdgeCloudEngine, MethodConfig, EngineConfig,
                                rollback_cache, row_key, summarize)
 from repro.core.channel import ChannelConfig, SharedUplink
+from repro.core.pages import PageAllocator, PageStats, pages_for

@@ -57,7 +57,9 @@ from repro.core import channel as channel_mod
 from repro.core import conformal
 from repro.core import sqs as sqs_mod
 from repro.core import verify as verify_mod
+from repro.core.pages import PageAllocator
 from repro.models import model as model_mod
+from repro.models.attention import PagedSpec, sanitize_page_table
 
 SEQ_BLOCKS = ("mamba", "mlstm", "slstm")
 
@@ -139,6 +141,8 @@ class EdgeCloudEngine:
         self._draft_jit = jax.jit(self._draft_round)
         self._verify_jit = jax.jit(self._verify_round)
         self._target_stateful = _is_stateful(target_cfg)
+        self.paged = False
+        self.alloc: Optional[PageAllocator] = None
 
     # ------------------------------------------------------------------
     def _sparsify(self, q, beta, logits=None):
@@ -238,6 +242,8 @@ class EdgeCloudEngine:
         token becomes x_last (first token the draft loop processes)."""
         B, S0 = prompts.shape
         self.B = B
+        self.paged = False
+        self.alloc = None
         total = S0 + 4096  # cache capacity headroom
         _, self.dcache = model_mod.prefill(self.dc, self.dp,
                                            prompts[:, :-1],
@@ -255,17 +261,41 @@ class EdgeCloudEngine:
     # ------------------------------------------------------------------
     # Session-slot API (continuous batching — repro.serve)
     # ------------------------------------------------------------------
-    def init_slots(self, n_slots: int, cache_len: int):
+    def init_slots(self, n_slots: int, cache_len: int,
+                   page_size: int = 0, n_pages: Optional[int] = None):
         """Allocate ``n_slots`` empty session slots with per-slot cache
         capacity ``cache_len``.  Slots are filled by admit_slot and freed
-        by release_slot; run_round only advances active slots."""
+        by release_slot; run_round only advances active slots.
+
+        ``page_size > 0`` switches eligible attention layers to the PAGED
+        layout: one shared pool of ``n_pages`` pages per layer (default:
+        slots × pages-per-slot, i.e. the dense footprint) instead of a
+        dense per-slot cache.  Pages are allocated on admit, grown before
+        each round, freed past the kept length on speculative rollback
+        and returned on release — so HBM holds the sum of ACTUAL request
+        lengths and ``n_pages`` (not slot count) caps concurrency."""
         assert self.dc.n_encoder_layers == 0 and \
             self.tc.n_encoder_layers == 0, \
             "serving slots do not support encoder-decoder architectures"
         self.B = n_slots
+        self.paged = page_size > 0
+        spec = None
+        if self.paged:
+            assert cache_len % page_size == 0, (cache_len, page_size)
+            maxp = cache_len // page_size
+            n_pages = n_pages if n_pages is not None else n_slots * maxp
+            assert n_pages >= maxp, \
+                "pool must fit at least one worst-case request"
+            spec = PagedSpec(page_size=page_size, n_pages=n_pages,
+                             max_pages_per_slot=maxp)
+            self.alloc = PageAllocator(n_pages, page_size, n_slots, maxp)
+        else:
+            self.alloc = None
         self.cache_len = cache_len
-        self.dcache = model_mod.init_cache(self.dc, n_slots, cache_len)
-        self.tcache = model_mod.init_cache(self.tc, n_slots, cache_len)
+        self.dcache = model_mod.init_cache(self.dc, n_slots, cache_len,
+                                           paged=spec)
+        self.tcache = model_mod.init_cache(self.tc, n_slots, cache_len,
+                                           paged=spec)
         self.x_last = jnp.zeros((n_slots,), jnp.int32)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.beta = jnp.full((n_slots,), self.m.beta0, jnp.float32)
@@ -278,19 +308,38 @@ class EdgeCloudEngine:
         self._prefill_t = jax.jit(functools.partial(
             model_mod.prefill, self.tc, cache_len=cache_len))
 
-    @staticmethod
-    def _scatter_slot(big, small, slot: int):
-        """Write a batch-1 cache into batch row ``slot`` of a multi-slot
-        cache.  Body/cross leaves carry batch at axis 1 (period-stacked);
-        prefix leaves at axis 0."""
-        out = dict(big)
-        for name, sub in big.items():
-            axis = 0 if name == "prefix" else 1
-            out[name] = jax.tree.map(
-                lambda b, s: jax.lax.dynamic_update_slice_in_dim(
-                    b, s.astype(b.dtype), slot, axis=axis),
-                sub, small[name])
-        return out
+    # -- paged-pool bookkeeping (host side; no-ops in dense mode) -------
+    def _device_tables(self):
+        return sanitize_page_table(self.alloc.table, self.alloc.n_pages)
+
+    def _push_tables(self):
+        pt = self._device_tables()
+        self.dcache = model_mod.set_page_tables(self.dcache, pt)
+        self.tcache = model_mod.set_page_tables(self.tcache, pt)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        assert self.paged
+        return self.alloc.pages_needed(n_tokens)
+
+    def free_pages(self) -> int:
+        assert self.paged
+        return self.alloc.free_pages
+
+    def ensure_round_capacity(self) -> bool:
+        """Grow every active slot's page table to cover this round's
+        draft window (pos + L_max + 1 positions).  Returns False on pool
+        exhaustion WITHOUT rolling back other slots' growth — the
+        serving layer preempts a request and retries."""
+        if not self.paged:
+            return True
+        pos = np.asarray(self.pos)
+        for slot in range(self.B):
+            if not self.active[slot]:
+                continue
+            if not self.alloc.ensure(slot,
+                                     int(pos[slot]) + self.e.L_max + 1):
+                return False
+        return True
 
     def admit_slot(self, slot: int, prompt, seed: int):
         """Prefill ``prompt`` (1-D int32, ≥ 2 tokens) into ``slot``.
@@ -310,10 +359,20 @@ class EdgeCloudEngine:
         assert S0 + self.e.L_max + 1 <= self.cache_len, \
             f"prompt ({S0}) + draft window ({self.e.L_max + 1}) exceeds " \
             f"slot capacity {self.cache_len}"
+        pt_row = None
+        if self.paged:
+            if not self.alloc.admit(slot, S0 - 1):
+                raise RuntimeError(
+                    f"page pool exhausted admitting slot {slot} "
+                    f"({self.alloc.free_pages} free); the scheduler "
+                    f"should gate admissions on free_pages()")
+            pt_row = self._device_tables()[slot]
         _, dcache1 = self._prefill_d(self.dp, prompt[None, :-1])
         _, tcache1 = self._prefill_t(self.tp, prompt[None, :-1])
-        self.dcache = self._scatter_slot(self.dcache, dcache1, slot)
-        self.tcache = self._scatter_slot(self.tcache, tcache1, slot)
+        self.dcache = model_mod.write_prefill_to_slot(
+            self.dc, self.dcache, dcache1, slot, pt_row, S0 - 1)
+        self.tcache = model_mod.write_prefill_to_slot(
+            self.tc, self.tcache, tcache1, slot, pt_row, S0 - 1)
         self.x_last = self.x_last.at[slot].set(prompt[-1])
         self.pos = self.pos.at[slot].set(S0 - 1)
         self.beta = conformal.admit_rows(
@@ -323,9 +382,12 @@ class EdgeCloudEngine:
         self.out_tokens[slot] = []
 
     def release_slot(self, slot: int):
-        """Evict a finished request; the slot's cache becomes dead weight
-        until the next admit_slot overwrites it."""
+        """Evict a finished (or preempted) request.  Dense mode: the
+        slot's cache is dead weight until the next admit overwrites it.
+        Paged mode: every page returns to the pool immediately."""
         self.active[slot] = False
+        if self.paged:
+            self.alloc.release(slot)
 
     # ------------------------------------------------------------------
     def run_round(self):
@@ -336,6 +398,13 @@ class EdgeCloudEngine:
         L = self.e.L_max
         active = np.asarray(self.active, bool)
         n_active = max(int(active.sum()), 1)
+        if self.paged:
+            if not self.ensure_round_capacity():
+                raise RuntimeError(
+                    "page pool exhausted growing the round's draft "
+                    "windows; preempt a request (ServeSession does) "
+                    "before run_round")
+            self._push_tables()
         self.keys, kd, kv = _split_rows(self.keys, 3)
 
         t0 = time.perf_counter()
@@ -386,6 +455,14 @@ class EdgeCloudEngine:
         # --- bookkeeping (active rows only) ---
         self.pos = self.pos + jnp.where(act_j, T + 1, 0)
         self.x_last = jnp.where(act_j, res.new_token, self.x_last)
+        if self.paged:
+            # speculative rollback, memory side: pages covering only the
+            # rejected draft tail (positions >= new pos) go back to the
+            # pool; the next round's ensure re-grows as needed.
+            pos_np = np.asarray(self.pos)
+            for slot in range(self.B):
+                if active[slot]:
+                    self.alloc.shrink(slot, int(pos_np[slot]))
         T_np = np.asarray(T)
         nt = np.asarray(res.new_token)
         dr = np.asarray(drafts)
@@ -420,6 +497,10 @@ class EdgeCloudEngine:
             "t_total": t_slm + t_up + t_llm + t_down,
             "tokens_out": np.where(active, 1 + T_np, 0),
         }
+        if self.paged:
+            metrics["pages_in_use"] = self.alloc.pages_in_use
+            metrics["free_pages"] = self.alloc.free_pages
+            metrics["peak_pages_in_use"] = self.alloc.peak_in_use
         if self.e.collect_theory:
             metrics["q"] = np.asarray(ys["q"][:L].swapaxes(0, 1))
             metrics["q_hat"] = np.asarray(q_hat)

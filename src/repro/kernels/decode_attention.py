@@ -1,23 +1,38 @@
-"""Flash-decode GQA kernel (Pallas TPU) with optional int8 KV cache.
+"""Flash-decode GQA kernels (Pallas TPU) with optional int8 KV cache.
 
 Decode attention is HBM-bound: one token's queries stream the whole KV
-cache.  This kernel tiles the cache sequence into VMEM blocks with online
+cache.  These kernels tile the cache sequence into VMEM blocks with online
 -softmax accumulators (flash), grouped-query layout (the qpk query heads
 of one KV head share a program), and — the beyond-paper lever for a
 quantization paper — int8 KV with per-(position, head) scales dequantised
 in VMEM, halving cache HBM traffic and capacity.
 
-    grid = (B, nkv, S_blocks)   (S innermost, "arbitrary" semantics)
+Two cache layouts share the kernel body:
+
+  dense  ``flash_gqa_decode_call``: k/v (B, S, nkv, hd), grid
+         (B, nkv, S_blocks) streams the contiguous cache;
+  paged  ``paged_flash_gqa_decode_call``: k/v live in a page pool
+         (n_pages + 1, page_size, nkv, hd) shared across slots; the grid
+         walks each slot's LOGICAL page list and the BlockSpec index_map
+         translates logical → physical page through a scalar-prefetched
+         page table (``pltpu.PrefetchScalarGridSpec``), so the DMA
+         engine gathers exactly the slot's pages — the serving-scale
+         layout where HBM holds sum-of-actual-lengths, not
+         slots × worst-case (core.pages.PageAllocator).
+
     q     : (B, nq, hd)                      bf16/f32
-    k/v   : (B, S, nkv, hd)                  bf16/f32/int8
-    scales: (B, S, nkv) f32                  (int8 mode)
     pos   : (B,) int32 — entries at index > pos are masked (cache slots
             beyond the current position are stale/unwritten)
     out   : (B, nq, hd) f32
+
+``interpret=None`` auto-detects the backend: compiled on TPU, Pallas
+interpreter elsewhere (override with env REPRO_PALLAS_COMPILE=1 /
+REPRO_PALLAS_INTERPRET=1 or kernels.ops.INTERPRET).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +41,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 S_BLOCK = 512
 NEG_INF = -1e30
+
+
+def resolve_interpret(flag=None) -> bool:
+    """Tri-state interpret flag: an explicit bool wins; None auto-detects
+    (compile on TPU, interpret on CPU/GPU).  Env overrides for forcing
+    either mode on any backend: REPRO_PALLAS_COMPILE=1 /
+    REPRO_PALLAS_INTERPRET=1."""
+    if flag is not None:
+        return bool(flag)
+    if os.environ.get("REPRO_PALLAS_COMPILE") == "1":
+        return False
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return True
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
@@ -67,10 +96,11 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
 
 
 def flash_gqa_decode_call(q, k, v, pos, k_scale=None, v_scale=None, *,
-                          s_block: int = S_BLOCK, interpret: bool = True):
+                          s_block: int = S_BLOCK, interpret=None):
     """q: (B, nq, hd); k/v: (B, S, nkv, hd); pos: (B,) int32.
     S must be a multiple of s_block (ops.py pads).  Returns (B, nq, hd)
     f32."""
+    interpret = resolve_interpret(interpret)
     B, nq, hd = q.shape
     _, S, nkv, _ = k.shape
     assert S % s_block == 0, (S, s_block)
@@ -104,6 +134,79 @@ def flash_gqa_decode_call(q, k, v, pos, k_scale=None, v_scale=None, *,
         ],
         interpret=interpret,
     )(pos, qg, k, v, k_scale, v_scale)
+    return out.reshape(B, nq, hd)
+
+
+# ----------------------------------------------------------------------
+# Paged flash decode: grid walks each slot's page list; the index_map
+# translates logical page -> physical pool row via the scalar-prefetched
+# page table, so only the slot's own pages are ever DMA'd.
+# ----------------------------------------------------------------------
+def _paged_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, page_size: int,
+                  quantized: bool, scale: float):
+    # identical flash body: program_id(2) is the LOGICAL page index, so
+    # idx = page * page_size + offset is the absolute position and the
+    # pos mask also kills trash-page blocks (allocated pages always
+    # cover pos; anything mapped to trash starts beyond it).
+    _kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, s_block=page_size, quantized=quantized,
+            scale=scale)
+
+
+def paged_flash_gqa_decode_call(q, k, v, page_table, pos,
+                                k_scale=None, v_scale=None, *,
+                                interpret=None):
+    """q: (B, nq, hd); k/v: page pools (P, page_size, nkv, hd) where row
+    P-1 may be a trash page; page_table: (B, max_pages) int32, every
+    entry a valid pool row (host FREE entries pre-mapped to trash —
+    models.attention.sanitize_page_table); pos: (B,) int32.  Returns
+    (B, nq, hd) f32, numerically the flash equivalent of gathering the
+    slot's pages into a dense cache and calling the dense kernel."""
+    interpret = resolve_interpret(interpret)
+    B, nq, hd = q.shape
+    P, ps, nkv, _ = k.shape
+    maxp = page_table.shape[1]
+    qpk = nq // nkv
+    quantized = k_scale is not None
+    if not quantized:
+        k_scale = jnp.zeros((P, ps, nkv), jnp.float32)
+        v_scale = jnp.zeros((P, ps, nkv), jnp.float32)
+    grid = (B, nkv, maxp)
+    kernel = functools.partial(
+        _paged_kernel, page_size=ps, quantized=quantized,
+        scale=1.0 / float(hd) ** 0.5)
+    qg = q.reshape(B, nkv, qpk, hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # page_table, pos
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qpk, hd),
+                         lambda b, h, i, pt, pos_r: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, pt, pos_r: (pt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, pt, pos_r: (pt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda b, h, i, pt, pos_r: (pt[b, i], 0, h)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda b, h, i, pt, pos_r: (pt[b, i], 0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpk, hd),
+                               lambda b, h, i, pt, pos_r: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nkv, qpk, hd), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32),
+      qg, k, v, k_scale, v_scale)
     return out.reshape(B, nq, hd)
 
 

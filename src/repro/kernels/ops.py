@@ -1,8 +1,11 @@
 """Public jit'd wrappers around the Pallas SQS kernels.
 
-``INTERPRET`` defaults to True in this CPU container (kernel bodies execute
-in Python for correctness validation); on real TPU set
-``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1).
+``INTERPRET`` is tri-state: None (default) auto-detects the backend —
+kernels COMPILE on TPU and fall back to the Pallas interpreter on
+CPU/GPU, so the kernel path is no longer interpreter-only in production.
+Force either mode with ``repro.kernels.ops.INTERPRET = True/False`` or
+env REPRO_PALLAS_COMPILE=1 / REPRO_PALLAS_INTERPRET=1
+(``decode_attention.resolve_interpret``).
 
 The wrappers handle vocab padding (lane multiple of 128, -inf logits) and
 adapt kernel outputs to the ``core.sqs.SQSResult`` interface, so the engine
@@ -11,7 +14,7 @@ can swap jnp ↔ Pallas paths with one flag.
 from __future__ import annotations
 
 import functools
-import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +22,13 @@ import jax.numpy as jnp
 from repro.core.sqs import SQSResult
 from repro.kernels import ref as ref_mod
 from repro.kernels import sqs_fused as k
+from repro.kernels.decode_attention import resolve_interpret
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "") != "1"
+INTERPRET: Optional[bool] = None     # None = auto-detect backend
+
+
+def _interpret() -> bool:
+    return resolve_interpret(INTERPRET)
 
 
 def _pad_logits(logits):
@@ -41,7 +49,7 @@ def sqs_threshold(logits, beta, temperature: float = 1.0, ell: int = 100,
     lp, V = _pad_logits(logits)
     beta2 = jnp.stack([beta, beta], axis=-1).astype(jnp.float32)
     fn = ref_mod.sqs_fused_ref if use_ref else functools.partial(
-        k.sqs_fused_call, interpret=INTERPRET)
+        k.sqs_fused_call, interpret=_interpret())
     b, mask, stats = fn(lp, beta2, inv_temp=1.0 / max(temperature, 1e-4),
                         ell=ell)
     q_hat = (b[:, :V].astype(jnp.float32) / ell)
@@ -65,9 +73,9 @@ def sqs_topk(logits, K: int, temperature: float = 1.0, ell: int = 100,
         b, mask, stats = ref_mod.sqs_fused_ref(lp, tau, inv_temp=it,
                                                ell=ell, exact_k=K)
     else:
-        tau = k.topk_threshold_call(q, K, interpret=INTERPRET)
+        tau = k.topk_threshold_call(q, K, interpret=_interpret())
         b, mask, stats = k.sqs_fused_call(lp, tau, inv_temp=it, ell=ell,
-                                          exact_k=K, interpret=INTERPRET)
+                                          exact_k=K, interpret=_interpret())
     q_hat = (b[:, :V].astype(jnp.float32) / ell)
     return SQSResult(q_hat, mask[:, :V].astype(bool), stats[:, 0],
                      stats[:, 1].astype(jnp.int32))
@@ -93,4 +101,20 @@ def gqa_decode(q, k, v, pos, k_scale=None, v_scale=None,
             k_scale = jnp.pad(k_scale, [(0, 0), (0, pad), (0, 0)])
             v_scale = jnp.pad(v_scale, [(0, 0), (0, pad), (0, 0)])
     return da.flash_gqa_decode_call(q, k, v, pos, k_scale, v_scale,
-                                    s_block=blk, interpret=INTERPRET)
+                                    s_block=blk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref",))
+def paged_gqa_decode(q, k, v, page_table, pos, k_scale=None, v_scale=None,
+                     use_ref: bool = False):
+    """Paged flash-decode GQA attention: K/V live in a shared page pool
+    (P, page_size, nkv, hd) addressed through per-slot ``page_table``
+    (B, max_pages) int32 (every entry a valid pool row; map host FREE
+    entries to the trash page first).  Returns (B, nq, hd) f32."""
+    from repro.kernels import decode_attention as da
+    if use_ref:
+        return ref_mod.paged_gqa_decode_ref(q, k, v, page_table, pos,
+                                            k_scale, v_scale)
+    return da.paged_flash_gqa_decode_call(q, k, v, page_table, pos,
+                                          k_scale, v_scale,
+                                          interpret=_interpret())

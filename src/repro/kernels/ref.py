@@ -79,6 +79,21 @@ def kth_largest_ref(q, K: int):
     return jax.lax.top_k(q, K)[0][..., -1]
 
 
+def paged_gqa_decode_ref(q, k, v, page_table, pos, k_scale=None,
+                         v_scale=None):
+    """Oracle for the paged flash-decode kernel: gather each slot's
+    pages into a dense (B, max_pages*page_size, nkv, hd) cache in
+    position order, then run the dense oracle."""
+    def gather(pool):
+        g = pool[page_table]                       # (B, maxp, ps, ...)
+        return g.reshape((g.shape[0], g.shape[1] * g.shape[2])
+                         + g.shape[3:])
+
+    ks = gather(k_scale) if k_scale is not None else None
+    vs = gather(v_scale) if v_scale is not None else None
+    return gqa_decode_ref(q, gather(k), gather(v), pos, ks, vs)
+
+
 def gqa_decode_ref(q, k, v, pos, k_scale=None, v_scale=None):
     """Dense oracle for the flash-decode kernel (optionally dequantising
     int8 KV with per-(position, head) scales)."""

@@ -83,6 +83,12 @@ def main():
                     choices=["continuous", "static"])
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-slot cache capacity (0 = auto)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="trace mode: paged KV pool page size in tokens "
+                         "(0 = dense per-slot caches)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="trace mode: KV pool size in pages (0 = auto: "
+                         "slots x pages-per-slot, the dense footprint)")
     args = ap.parse_args()
 
     tc = configs.get_config(args.arch)
@@ -112,11 +118,15 @@ def main():
             vocab=tc.vocab, seed=args.seed))
         sess = ServeSession(eng, ServeConfig(
             max_batch=args.max_batch, queue_cap=args.queue_cap,
-            policy=args.policy, cache_len=cache_len))
+            policy=args.policy, cache_len=cache_len,
+            page_size=args.page_size,
+            n_pages=args.n_pages or None))
         rep = sess.run_trace(trace)
+        kv = (f"paged({args.page_size}-tok pages)" if args.page_size
+              else "dense")
         print(f"[serve --trace] {tc.name} <- {dc.name}  "
               f"method={args.method} policy={args.policy} "
-              f"rate={args.rate}/s slots={args.max_batch}")
+              f"rate={args.rate}/s slots={args.max_batch} kv={kv}")
         for k, v in rep.summary().items():
             if isinstance(v, float):
                 print(f"  {k:24s} {v:.6g}")

@@ -1,3 +1,5 @@
 from repro.models.model import (init_params, train_loss, prefill, forward_logits,
                                 extend_step, decode_step, init_cache,
-                                param_count)
+                                param_count, set_page_tables,
+                                write_prefill_to_slot)
+from repro.models.attention import PagedSpec, paged_eligible

@@ -6,10 +6,25 @@ so that no (S, S) score tensor is ever materialised (required for the
 32k-prefill dry-run shapes).  Decode reads/writes a KV cache; sliding-window
 archs use a ring buffer of size W with keys RoPE'd at write time.
 
+KV caches come in two layouts:
+
+  dense   (B, Sc, nkv, hd) per-slot contiguous — training, solo decode;
+  paged   a pool of (n_pages + 1, page_size, nkv, hd) pages shared by
+          every slot, addressed through a per-slot page table
+          (core.pages.PageAllocator).  ``attn_extend`` takes the paged
+          path when the cache dict carries a ``page_table`` leaf; after
+          the gather both layouts run the SAME ``_extend_core`` math, so
+          a request's token stream is bit-identical across layouts (the
+          serve tests assert this).  Pool row ``n_pages`` is a TRASH
+          page: masked-out batch rows and unallocated table entries
+          point there, so their writes can never land on a live page.
+
 Scan discipline (DESIGN.md): no collectives inside these scans — heads are
 sharded over ``model`` and batch over ``data``; all contractions are local.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +33,35 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import dense_init, split_keys, rope_apply_by_cfg
 
 NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Geometry of the paged KV pool (one pool per attention layer).
+
+    ``n_pages`` usable pages of ``page_size`` positions; page tables are
+    ``max_pages_per_slot`` wide (per-request capacity ceiling).  The
+    physical pool has ``n_pages + 1`` rows — the last is the trash page.
+    """
+    page_size: int
+    n_pages: int
+    max_pages_per_slot: int
+
+    @property
+    def trash_page(self) -> int:
+        return self.n_pages
+
+    @property
+    def tokens_per_slot_max(self) -> int:
+        return self.max_pages_per_slot * self.page_size
+
+
+def paged_eligible(cfg: ModelConfig) -> bool:
+    """Which attention layers can live in the page pool: standard GQA
+    over the full context.  Sliding-window layers are already bounded by
+    W and keep their ring buffers; MLA latent caches stay dense (paging
+    them is a follow-up — the latent is 1 head, different leaf shapes)."""
+    return cfg.attention == "full" and not cfg.is_mla
 
 
 # ----------------------------------------------------------------------
@@ -157,6 +201,75 @@ def _quantize_heads(x):
     return q, scale
 
 
+# ----------------------------------------------------------------------
+# Paged KV pool
+# ----------------------------------------------------------------------
+def make_paged_kv_cache(cfg: ModelConfig, batch: int, spec: PagedSpec,
+                        dtype):
+    """Page pool + per-slot page table for one attention layer.  Every
+    table entry starts at the trash page (nothing allocated); the engine
+    overwrites tables from the host-side ``PageAllocator`` each round."""
+    assert paged_eligible(cfg), (cfg.name, cfg.attention, cfg.kv_lora_rank)
+    P = spec.n_pages + 1                       # + trash page
+    shp = (P, spec.page_size, cfg.n_kv_heads, cfg.head_dim)
+    pt = jnp.full((batch, spec.max_pages_per_slot), spec.trash_page,
+                  jnp.int32)
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros(shp, jnp.int8),
+                "v": jnp.zeros(shp, jnp.int8),
+                "k_scale": jnp.zeros(shp[:3], jnp.float32),
+                "v_scale": jnp.zeros(shp[:3], jnp.float32),
+                "page_table": pt}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "page_table": pt}
+
+
+def sanitize_page_table(table, n_pages: int):
+    """Host table → device table: FREE (-1) entries become the trash
+    page, so unallocated logical pages read garbage (masked) and write
+    harmlessly instead of wrapping to a live page."""
+    t = jnp.asarray(table, jnp.int32)
+    return jnp.where(t >= 0, t, n_pages)
+
+
+def page_gather(pool, pt):
+    """pool: (P, ps, ...); pt: (B, maxp) -> (B, maxp*ps, ...) — a slot's
+    cache in position order (trash-page rows are masked by position
+    downstream)."""
+    g = pool[pt]                               # (B, maxp, ps, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def page_scatter(pool, vals, pt, positions):
+    """Write ``vals`` (B, L, ...) at absolute ``positions`` (B, L)
+    through page table ``pt`` (B, maxp).  Slots own disjoint pages, so
+    rows never collide; rows whose table points at the trash page write
+    there."""
+    ps = pool.shape[1]
+    pg = jnp.take_along_axis(pt, positions // ps, axis=1)   # (B, L)
+    off = positions % ps
+    return pool.at[pg, off].set(vals.astype(pool.dtype))
+
+
+def prefill_into_pages(paged, dense_kv, pt_row, length: int):
+    """Write a batch-1 prefill cache's first ``length`` positions through
+    one slot's page table row.  Leaves carry the period-stack axis in
+    front: pools (N, P, ps, ...) vs dense prefill KV (N, 1, S, ...).
+    ``length`` is a host int (admit retraces per prompt length anyway)."""
+    ps = paged["k"].shape[2]                   # (N, P, ps, nkv, hd)
+    idx = jnp.arange(length)
+    pg = pt_row[idx // ps]                     # (T,)
+    off = idx % ps
+    out = dict(paged)
+    for name in dense_kv:
+        if name not in paged:
+            continue
+        vals = dense_kv[name][:, 0, :length]   # (N, T, ...)
+        out[name] = paged[name].at[:, pg, off].set(
+            vals.astype(paged[name].dtype))
+    return out
+
+
 def attn_prefill(cfg: ModelConfig, p, x, positions):
     """Prefill: causal attention over the prompt + build the decode cache."""
     q, k, v = _qkv(cfg, p, x, positions)
@@ -187,35 +300,14 @@ def attn_prefill(cfg: ModelConfig, p, x, positions):
     return out, cache
 
 
-def attn_extend(cfg: ModelConfig, p, x, positions, cache, pos):
-    """Extend: attend L new tokens (x: (B, L, d)) against cache + selves.
-    ``pos``: (B,) absolute index of the FIRST new token.  Single-token
-    decode is L=1; speculative-decoding verification is L = draft length.
-    Returns (out (B, L, d), updated cache)."""
-    dt = x.dtype
-    q, k, v = _qkv(cfg, p, x, positions)
-    B, L = x.shape[:2]
-    Sc = cache["k"].shape[1]
-    window = cfg.sliding_window if cfg.attention == "sliding" else 0
-    abs_new = pos[:, None] + jnp.arange(L)[None, :]     # (B, L)
-    slot = abs_new % Sc if window else abs_new
-    bidx = jnp.arange(B)[:, None]
-    int8_cache = cache["k"].dtype == jnp.int8
-    new_cache = {}
-    if int8_cache:
-        k8, ks = _quantize_heads(k)
-        v8, vs = _quantize_heads(v)
-        ck8 = cache["k"].at[bidx, slot].set(k8)
-        cv8 = cache["v"].at[bidx, slot].set(v8)
-        cks = cache["k_scale"].at[bidx, slot].set(ks)
-        cvs = cache["v_scale"].at[bidx, slot].set(vs)
-        new_cache = {"k": ck8, "v": cv8, "k_scale": cks, "v_scale": cvs}
-        ck = ck8.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
-        cv = cv8.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
-    else:
-        ck = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
-        cv = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
-        new_cache = None
+def _extend_core(cfg: ModelConfig, p, q, ck, cv, abs_new, window: int, dt):
+    """The extend attention math shared by the dense and paged layouts:
+    L queries against the full (gathered) cache ``ck``/``cv``
+    (B, Sc, nkv, hd), causal+window masked by absolute position.  Both
+    layouts MUST run this exact function — that is what makes paged and
+    contiguous serving bit-identical."""
+    B, L = abs_new.shape
+    Sc = ck.shape[1]
     nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     qpk = nq // nkv
     qg = q.reshape(B, L, nkv, qpk, hd)
@@ -244,10 +336,77 @@ def attn_extend(cfg: ModelConfig, p, x, positions, cache, pos):
     o = jnp.einsum("bkgls,bskh->blkgh", prob.astype(cv.dtype), cv,
                    preferred_element_type=jnp.float32)
     o = o.reshape(B, L, nq, hd).astype(dt)
-    out = jnp.einsum("bsnh,nhd->bsd", o, p["w_o"].astype(dt))
-    if new_cache is not None:
-        return out, new_cache
-    return out, {"k": ck, "v": cv}
+    return jnp.einsum("bsnh,nhd->bsd", o, p["w_o"].astype(dt))
+
+
+def attn_extend(cfg: ModelConfig, p, x, positions, cache, pos):
+    """Extend: attend L new tokens (x: (B, L, d)) against cache + selves.
+    ``pos``: (B,) absolute index of the FIRST new token.  Single-token
+    decode is L=1; speculative-decoding verification is L = draft length.
+    Returns (out (B, L, d), updated cache).  A cache dict carrying a
+    ``page_table`` leaf takes the paged-pool path."""
+    if "page_table" in cache:
+        return _attn_extend_paged(cfg, p, x, positions, cache, pos)
+    dt = x.dtype
+    q, k, v = _qkv(cfg, p, x, positions)
+    B, L = x.shape[:2]
+    Sc = cache["k"].shape[1]
+    window = cfg.sliding_window if cfg.attention == "sliding" else 0
+    abs_new = pos[:, None] + jnp.arange(L)[None, :]     # (B, L)
+    slot = abs_new % Sc if window else abs_new
+    bidx = jnp.arange(B)[:, None]
+    int8_cache = cache["k"].dtype == jnp.int8
+    if int8_cache:
+        k8, ks = _quantize_heads(k)
+        v8, vs = _quantize_heads(v)
+        ck8 = cache["k"].at[bidx, slot].set(k8)
+        cv8 = cache["v"].at[bidx, slot].set(v8)
+        cks = cache["k_scale"].at[bidx, slot].set(ks)
+        cvs = cache["v_scale"].at[bidx, slot].set(vs)
+        new_cache = {"k": ck8, "v": cv8, "k_scale": cks, "v_scale": cvs}
+        ck = ck8.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
+        cv = cv8.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
+    else:
+        ck = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+    out = _extend_core(cfg, p, q, ck, cv, abs_new, window, dt)
+    return out, new_cache
+
+
+def _attn_extend_paged(cfg: ModelConfig, p, x, positions, cache, pos):
+    """Paged extend: scatter the L new tokens' K/V into the page pool
+    through the slot page tables, gather each slot's pages back into
+    position order, then run the shared ``_extend_core``.  The engine
+    guarantees every ACTIVE row's table covers pos+L tokens; masked rows
+    point at the trash page."""
+    assert cfg.attention == "full", "paged KV requires full attention"
+    dt = x.dtype
+    q, k, v = _qkv(cfg, p, x, positions)
+    B, L = x.shape[:2]
+    pt = cache["page_table"]                            # (B, maxp) >= 0
+    abs_new = pos[:, None] + jnp.arange(L)[None, :]     # (B, L)
+    int8_cache = cache["k"].dtype == jnp.int8
+    if int8_cache:
+        k8, ks = _quantize_heads(k)
+        v8, vs = _quantize_heads(v)
+        pk = page_scatter(cache["k"], k8, pt, abs_new)
+        pv = page_scatter(cache["v"], v8, pt, abs_new)
+        pks = page_scatter(cache["k_scale"], ks, pt, abs_new)
+        pvs = page_scatter(cache["v_scale"], vs, pt, abs_new)
+        new_cache = {"k": pk, "v": pv, "k_scale": pks, "v_scale": pvs,
+                     "page_table": pt}
+        ck8, cv8 = page_gather(pk, pt), page_gather(pv, pt)
+        cks, cvs = page_gather(pks, pt), page_gather(pvs, pt)
+        ck = ck8.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
+        cv = cv8.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
+    else:
+        pk = page_scatter(cache["k"], k, pt, abs_new)
+        pv = page_scatter(cache["v"], v, pt, abs_new)
+        new_cache = {"k": pk, "v": pv, "page_table": pt}
+        ck, cv = page_gather(pk, pt), page_gather(pv, pt)
+    out = _extend_core(cfg, p, q, ck, cv, abs_new, 0, dt)
+    return out, new_cache
 
 
 # ----------------------------------------------------------------------

@@ -64,14 +64,18 @@ def param_count(params) -> int:
 # Cache
 # ----------------------------------------------------------------------
 def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None,
-               enc_seq: int = 0):
+               enc_seq: int = 0, paged=None):
+    """``paged``: an ``attention.PagedSpec`` — eligible body attention
+    layers get a shared page pool + per-slot page tables instead of
+    dense (B, seq, ...) KV; prefix layers and non-eligible blocks keep
+    their dense/stateful caches."""
     dtype = dtype or compute_dtype(cfg)
     cache = {}
     if cfg.n_prefix_layers:
         cache["prefix"] = {
             f"l{i}": tfm.init_block_cache(cfg, "attn", batch, seq, dtype)
             for i in range(cfg.n_prefix_layers)}
-    cache["body"] = tfm.init_body_cache(cfg, batch, seq, dtype)
+    cache["body"] = tfm.init_body_cache(cfg, batch, seq, dtype, paged=paged)
     if cfg.n_encoder_layers:
         N = cfg.n_periods
         kv = {"k": jnp.zeros((batch, enc_seq, cfg.n_kv_heads, cfg.head_dim),
@@ -82,6 +86,53 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None,
             lambda a: jnp.broadcast_to(a[None], (N,) + a.shape),
             {f"p{i}": kv for i in range(cfg.period)})
     return cache
+
+
+def set_page_tables(cache, pt):
+    """Refresh every paged body period's ``page_table`` leaf from a
+    sanitized device table ``pt`` (B, maxp).  The engine calls this
+    after each host-side allocator change (admit / growth / rollback
+    shrink / release) so the next jitted round reads current mappings."""
+    body = {}
+    for name, sub in cache["body"].items():
+        if isinstance(sub, dict) and "page_table" in sub:
+            N = sub["page_table"].shape[0]
+            sub = dict(sub)
+            sub["page_table"] = jnp.broadcast_to(pt[None], (N,) + pt.shape)
+        body[name] = sub
+    out = dict(cache)
+    out["body"] = body
+    return out
+
+
+def write_prefill_to_slot(cfg: ModelConfig, big, small, slot: int,
+                          pt_row=None, length: int = 0):
+    """Scatter a batch-1 prefill cache into a multi-slot cache.  Dense /
+    stateful leaves go into batch row ``slot`` (body/cross leaves carry
+    batch at axis 1, prefix at axis 0); paged body periods instead write
+    the prompt's first ``length`` positions through ``pt_row`` into the
+    shared page pool."""
+    out = dict(big)
+    for name, sub in big.items():
+        if name == "body":
+            nb = {}
+            for pname, pcache in sub.items():
+                if isinstance(pcache, dict) and "page_table" in pcache:
+                    nb[pname] = attn_mod.prefill_into_pages(
+                        pcache, small["body"][pname], pt_row, length)
+                else:
+                    nb[pname] = jax.tree.map(
+                        lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+                            b, s.astype(b.dtype), slot, axis=1),
+                        pcache, small["body"][pname])
+            out[name] = nb
+        else:
+            axis = 0 if name == "prefix" else 1
+            out[name] = jax.tree.map(
+                lambda b, s, a=axis: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), slot, axis=a),
+                sub, small[name])
+    return out
 
 
 def _build_cross_kvs(cfg: ModelConfig, body_p, enc_out):

@@ -51,8 +51,10 @@ def init_block(key, cfg: ModelConfig, block_type: str, ffn_type: str,
 
 
 def init_block_cache(cfg: ModelConfig, block_type: str, batch: int,
-                     seq: int, dtype):
+                     seq: int, dtype, paged=None):
     if block_type == "attn":
+        if paged is not None and attn.paged_eligible(cfg):
+            return attn.make_paged_kv_cache(cfg, batch, paged, dtype)
         return attn.make_kv_cache(cfg, batch, seq, dtype)
     if block_type == "mamba":
         return ssm.make_mamba_state(cfg, batch, dtype)
@@ -169,12 +171,12 @@ def init_body(key, cfg: ModelConfig, cross: bool = False):
 
 
 def init_body_cache(cfg: ModelConfig, batch: int, seq: int, dtype,
-                    cross: bool = False, enc_seq: int = 0):
+                    cross: bool = False, enc_seq: int = 0, paged=None):
     P, N = cfg.period, cfg.n_periods
 
     def one():
         c = {f"p{i}": init_block_cache(cfg, cfg.block_pattern[i], batch, seq,
-                                       dtype)
+                                       dtype, paged=paged)
              for i in range(P)}
         return c
 

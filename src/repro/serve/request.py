@@ -40,6 +40,7 @@ class Request:
     t_finish: Optional[float] = None
     uplink_wait_s: float = 0.0         # total head-of-line blocking
     n_rounds: int = 0
+    n_preempts: int = 0                # times evicted on page exhaustion
 
     def add_tokens(self, new_tokens, now: float) -> bool:
         """Append one round's emitted tokens; truncate at EOS or the

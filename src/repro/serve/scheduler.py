@@ -14,18 +14,31 @@ Admission control: the waiting room holds at most ``queue_cap``
 requests; arrivals beyond that are rejected (the per-method rejection
 rate the paper-level load study reports).
 
+Paged-KV serving adds two mechanisms:
+  * ``schedule(now, can_admit=...)`` gates admissions on a resource
+    predicate (the session passes "enough free pages for the prompt +
+    one draft window"); the queue stays FIFO — a head request that does
+    not fit blocks the tail (no size-based skipping / starvation);
+  * ``preempt`` evicts an ACTIVE request back to the FRONT of the
+    waiting queue when the page pool is exhausted mid-flight.  Its
+    tokens are discarded — per-request RNG streams make the re-run emit
+    the identical text — and it bypasses ``queue_cap`` (it was already
+    admitted once).
+
 Invariants (asserted by ``check_invariants`` and the scheduler tests):
   * a slot holds at most one ACTIVE request, and every ACTIVE request
     holds exactly one slot;
-  * len(active) <= max_batch, len(waiting) <= queue_cap;
-  * requests never skip states (QUEUED -> ACTIVE -> FINISHED, or
-    QUEUED -> REJECTED on arrival only).
+  * len(active) <= max_batch;
+  * len(waiting) <= queue_cap + max_batch (the slack is preempted
+    requests re-queued at the front);
+  * requests never skip states (QUEUED -> ACTIVE -> {FINISHED | back to
+    QUEUED on preemption}, or QUEUED -> REJECTED on arrival only).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.serve.request import Request, RequestState
 
@@ -45,6 +58,7 @@ class Scheduler:
         self.slots: List[Optional[Request]] = [None] * cfg.max_batch
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
+        self.n_preemptions = 0
 
     # -- queries --------------------------------------------------------
     @property
@@ -80,15 +94,21 @@ class Scheduler:
         self.waiting.append(req)
         return True
 
-    def schedule(self, now: float) -> List[Tuple[int, Request]]:
+    def schedule(self, now: float,
+                 can_admit: Optional[Callable[[Request], bool]] = None,
+                 ) -> List[Tuple[int, Request]]:
         """One scheduling tick: admit waiting requests into free slots
-        according to the policy.  Returns (slot, request) admissions; the
+        according to the policy.  ``can_admit`` (paged serving) gates
+        each admission on resources; the FIFO head blocks the tail when
+        it does not fit.  Returns (slot, request) admissions; the
         session must prefill each admitted request into its slot."""
         if self.cfg.policy == "static" and self.n_active > 0:
             return []          # batch barrier: drain before refilling
         admissions = []
         for slot in self.free_slots:
             if not self.waiting:
+                break
+            if can_admit is not None and not can_admit(self.waiting[0]):
                 break
             req = self.waiting.popleft()
             req.state = RequestState.ACTIVE
@@ -97,6 +117,24 @@ class Scheduler:
             self.slots[slot] = req
             admissions.append((slot, req))
         return admissions
+
+    def preempt(self, req: Request) -> int:
+        """Page-pool exhaustion eviction: the request loses its slot and
+        its generated-so-far tokens (deterministic per-request RNG makes
+        the re-run reproduce them) and re-queues at the FRONT of the
+        waiting room.  Returns the freed slot id for the engine side."""
+        assert req.state == RequestState.ACTIVE and req.slot is not None
+        assert self.slots[req.slot] is req
+        slot = req.slot
+        self.slots[slot] = None
+        req.state = RequestState.QUEUED
+        req.slot = None
+        req.tokens = []
+        req.t_first_token = None
+        req.n_preempts += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(req)
+        return slot
 
     def complete(self, req: Request, now: float) -> int:
         """Eviction on completion: frees the slot.  Returns the slot id
@@ -113,7 +151,9 @@ class Scheduler:
     # -- invariants ------------------------------------------------------
     def check_invariants(self):
         assert len(self.slots) == self.cfg.max_batch
-        assert len(self.waiting) <= self.cfg.queue_cap
+        # slack over queue_cap: preempted requests re-queue at the front
+        # without re-passing admission control
+        assert len(self.waiting) <= self.cfg.queue_cap + self.cfg.max_batch
         seen = set()
         for slot, req in enumerate(self.slots):
             if req is None:

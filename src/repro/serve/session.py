@@ -18,6 +18,16 @@
 
 When no request is active the clock jumps to the next arrival (the
 server idles).  The loop ends when the trace is drained.
+
+Paged KV serving (``page_size > 0``): the engine's caches become a
+shared page pool (core.pages.PageAllocator) and admission is gated by
+FREE PAGES, not free slots — ``max_batch`` can exceed what dense
+per-slot caches would allow because short requests only hold the pages
+they actually use.  Before every round the active slots' draft windows
+are grown; on pool exhaustion the most recently admitted request is
+preempted (pages freed, re-queued at the front — its deterministic RNG
+re-emits the same tokens) until the round fits.  ``ServeReport`` gains
+n_preempted / peak_active / peak_pages_in_use for the load study.
 """
 from __future__ import annotations
 
@@ -37,8 +47,15 @@ class ServeConfig:
     max_batch: int = 4
     queue_cap: int = 64
     policy: str = "continuous"      # continuous | static
-    cache_len: int = 256            # per-slot KV/SSM capacity
+    cache_len: int = 256            # per-REQUEST KV capacity ceiling
     max_rounds: int = 100_000       # safety valve for the replay loop
+    # Paged KV pool: page_size > 0 switches eligible attention layers to
+    # a shared page pool; admission is then by free pages.  n_pages None
+    # defaults to max_batch * ceil(cache_len / page_size) (the dense
+    # footprint); set it LOWER to serve more slots than dense caches
+    # could back — the whole point of paging.
+    page_size: int = 0
+    n_pages: Optional[int] = None
     # Fixed per-round compute costs for the serving clock (seconds).
     # None: use the engine's measured wall-clock per round.  Setting both
     # turns the replay into a deterministic discrete-event simulation —
@@ -59,6 +76,7 @@ class ServeReport:
     throughput_tok_s: float
     latency_p50_s: float
     latency_p90_s: float
+    latency_p95_s: float
     latency_p99_s: float
     ttft_mean_s: float
     queue_wait_mean_s: float
@@ -66,6 +84,12 @@ class ServeReport:
     uplink_utilization: float
     rejection_rate: float
     n_rounds: int
+    # paged-KV load metrics (zeros in dense mode)
+    n_preempted: int = 0
+    peak_active: int = 0
+    page_size: int = 0
+    n_pages: int = 0
+    peak_pages_in_use: int = 0
     requests: List[Request] = dataclasses.field(default_factory=list,
                                                 repr=False)
 
@@ -91,37 +115,92 @@ class ServeSession:
         self.uplink = channel_mod.SharedUplink(engine.ch)
         self.now = 0.0
         self.n_rounds = 0
-        engine.init_slots(cfg.max_batch, cfg.cache_len)
+        self.peak_active = 0
+        self.paged = cfg.page_size > 0
+        if self.paged:
+            # per-request capacity ceiling, rounded up to whole pages
+            # (also what makes paged == contiguous bit-identical: both
+            # layouts see the same masked cache width)
+            ps = cfg.page_size
+            self.cache_len = -(-cfg.cache_len // ps) * ps
+            engine.init_slots(cfg.max_batch, self.cache_len,
+                              page_size=ps, n_pages=cfg.n_pages)
+        else:
+            self.cache_len = cfg.cache_len
+            engine.init_slots(cfg.max_batch, cfg.cache_len)
 
     # ------------------------------------------------------------------
     def _cache_need(self, req: Request) -> int:
-        """Worst-case slot-cache footprint: prompt + generated tokens +
-        one full draft window beyond the last accepted position."""
+        """Worst-case per-request cache footprint: prompt + generated
+        tokens + one full draft window beyond the last accepted
+        position."""
         return (int(req.prompt.shape[0]) + req.max_new_tokens
                 + self.engine.e.L_max + 1)
 
     def _admit_arrivals(self, pending: List[Request]):
         """Move trace arrivals with t_arrival <= now into the scheduler.
-        A request that could never fit a slot cache is REJECTED at
-        arrival — one bad request must not abort the replay for everyone
-        else."""
+        A request that could never fit its per-request capacity (or, in
+        paged mode, the whole pool) is REJECTED at arrival — one bad
+        request must not abort the replay for everyone else."""
         while pending and pending[0].t_arrival <= self.now:
             req = pending.pop(0)
-            if self._cache_need(req) > self.cfg.cache_len:
+            if self._cache_need(req) > self.cache_len:
                 self.sched.reject(req)
                 continue
             self.sched.submit(req, self.now)
 
+    def _page_gate(self):
+        """Paged admission gate: enough free pages for the prompt plus
+        one draft window.  Deliberately NOT the worst case — memory is
+        oversubscribed and preemption is the backstop, which is how the
+        pool serves more concurrent requests than dense slots could.
+
+        Pages are only CONSUMED when ``_schedule_tick`` later calls
+        ``admit_slot``, so within one tick the gate must account for the
+        admissions it already approved: it reserves each one's prefill
+        need (<= the window need it was gated on), which guarantees
+        every approved ``admit_slot`` succeeds."""
+        eng = self.engine
+        reserved = [0]
+
+        def gate(req: Request) -> bool:
+            S0 = int(req.prompt.shape[0])
+            window_need = eng.pages_needed(S0 + eng.e.L_max + 1)
+            if eng.free_pages() - reserved[0] < window_need:
+                return False
+            reserved[0] += eng.pages_needed(S0 - 1)   # consumed at admit
+            return True
+
+        return gate
+
     def _schedule_tick(self):
-        for slot, req in self.sched.schedule(self.now):
-            assert self._cache_need(req) <= self.cfg.cache_len, \
-                f"request {req.rid} exceeds cache_len " \
-                f"{self.cfg.cache_len}"
+        gate = self._page_gate() if self.paged else None
+        for slot, req in self.sched.schedule(self.now, can_admit=gate):
+            assert self._cache_need(req) <= self.cache_len, \
+                f"request {req.rid} exceeds cache_len {self.cache_len}"
             self.engine.admit_slot(slot, req.prompt, req.seed)
+
+    def _grow_or_preempt(self):
+        """Grow every active slot's draft window; on pool exhaustion
+        preempt the most recently admitted request (LIFO — it has the
+        least sunk work) until the round fits.  Terminates: a single
+        active request's window is <= cache_len <= pool size."""
+        eng, sched = self.engine, self.sched
+        while not eng.ensure_round_capacity():
+            active = sched.active_requests
+            assert len(active) > 1, \
+                "single request exceeded the page pool — arrival " \
+                "admission should have rejected it"
+            victim = max(active, key=lambda r: (r.t_admit, r.slot))
+            slot = sched.preempt(victim)
+            eng.release_slot(slot)
 
     def _step_round(self):
         """One SD round + clock accounting.  Returns finished requests."""
         eng, sched = self.engine, self.sched
+        if self.paged:
+            self._grow_or_preempt()
+        self.peak_active = max(self.peak_active, sched.n_active)
         m = eng.run_round()
         self.n_rounds += 1
 
@@ -191,6 +270,7 @@ class ServeSession:
             throughput_tok_s=toks / mk if mk > 0 else 0.0,
             latency_p50_s=_percentile(lats, 50),
             latency_p90_s=_percentile(lats, 90),
+            latency_p95_s=_percentile(lats, 95),
             latency_p99_s=_percentile(lats, 99),
             ttft_mean_s=float(np.mean([r.ttft_s for r in fin]))
             if fin else float("nan"),
@@ -203,5 +283,11 @@ class ServeSession:
             uplink_utilization=self.uplink.utilization(mk),
             rejection_rate=len(self.sched.rejected) / max(n_total, 1),
             n_rounds=self.n_rounds,
+            n_preempted=self.sched.n_preemptions,
+            peak_active=self.peak_active,
+            page_size=self.cfg.page_size,
+            n_pages=self.engine.alloc.n_pages if self.paged else 0,
+            peak_pages_in_use=self.engine.alloc.peak_in_use
+            if self.paged else 0,
             requests=self.sched.finished + self.sched.rejected,
         )

@@ -137,6 +137,54 @@ def test_flash_decode_kernel_vs_ref(B, S, nkv, qpk, hd):
     assert float(jnp.max(jnp.abs(out8 - r))) < 0.02
 
 
+@pytest.mark.parametrize("nkv,qpk,hd,ps,maxp,n_pages",
+                         [(2, 4, 64, 16, 8, 20), (1, 8, 128, 32, 4, 6),
+                          (4, 1, 64, 8, 16, 40)])
+def test_paged_flash_decode_kernel_vs_ref(nkv, qpk, hd, ps, maxp, n_pages):
+    """Paged kernel: the grid walks each slot's LOGICAL page list and the
+    scalar-prefetched page table picks the physical pool row.  Must match
+    the gather-then-dense oracle, fp and int8, including trash-page
+    entries past the allocation."""
+    from repro.kernels.decode_attention import quantize_kv
+    B = 3
+    nq = nkv * qpk
+    P = n_pages + 1                            # + trash page
+    rng = np.random.default_rng(nkv * hd + ps)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, nq, hd), jnp.float32)
+    pool_k = jax.random.normal(jax.random.PRNGKey(1), (P, ps, nkv, hd))
+    pool_v = jax.random.normal(jax.random.PRNGKey(2), (P, ps, nkv, hd))
+    # disjoint per-slot page lists in a shuffled physical order; entries
+    # beyond each slot's allocation point at the trash page
+    perm = rng.permutation(n_pages)
+    pt = np.full((B, maxp), n_pages, np.int32)
+    used, pos = 0, []
+    for b in range(B):
+        npg = int(rng.integers(1, min(maxp, n_pages - used - (B - 1 - b))
+                               + 1))
+        pt[b, :npg] = perm[used:used + npg]
+        used += npg
+        pos.append(npg * ps - int(rng.integers(1, ps)))
+    pt = jnp.asarray(pt)
+    pos = jnp.asarray(pos, jnp.int32)
+    out = ops.paged_gqa_decode(q, pool_k, pool_v, pt, pos)
+    r = ops.paged_gqa_decode(q, pool_k, pool_v, pt, pos, use_ref=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5)
+    # agreement with the DENSE kernel on the gathered cache: paging must
+    # not change the math, only the addressing
+    gk = pool_k[pt].reshape(B, maxp * ps, nkv, hd)
+    gv = pool_v[pt].reshape(B, maxp * ps, nkv, hd)
+    dense = ops.gqa_decode(q, gk, gv, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               atol=2e-5)
+    # int8 pools with per-(position, head) scale side tables
+    k8, ks = quantize_kv(pool_k)
+    v8, vs = quantize_kv(pool_v)
+    out8 = ops.paged_gqa_decode(q, k8, v8, pt, pos, ks, vs)
+    r8 = ops.paged_gqa_decode(q, k8, v8, pt, pos, ks, vs, use_ref=True)
+    np.testing.assert_allclose(np.asarray(out8), np.asarray(r8), atol=2e-5)
+    assert float(jnp.max(jnp.abs(out8 - r))) < 0.02
+
+
 def test_flash_decode_bf16_cache():
     nq, nkv, hd, B, S = 8, 2, 64, 2, 640
     q = jax.random.normal(jax.random.PRNGKey(0), (B, nq, hd), jnp.float32)

@@ -1,0 +1,121 @@
+"""PageAllocator invariants: conservation, no leaks or double-frees,
+atomic growth, prefix-dense tables — example-based plus a property test
+driving random admit/extend(ensure)/rollback(shrink)/release sequences
+against a token-capacity mirror model."""
+import pytest
+
+from repro.core.pages import FREE, PageAllocator, pages_for
+from tests._hypothesis_compat import given, settings, st
+
+N_SLOTS, N_PAGES, PS, MAXP = 4, 12, 8, 6
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(-3, 8) == 0
+
+
+def test_admit_grow_shrink_release_lifecycle():
+    a = PageAllocator(N_PAGES, PS, N_SLOTS, MAXP)
+    assert a.free_pages == N_PAGES and a.pages_in_use == 0
+    assert a.admit(0, 10)                       # 2 pages
+    assert a.slot_pages(0) == 2
+    assert a.slot_tokens_capacity(0) == 2 * PS
+    assert a.ensure(0, 2 * PS)                  # already covered: no-op
+    assert a.slot_pages(0) == 2
+    assert a.ensure(0, 2 * PS + 1)              # grow to 3
+    assert a.slot_pages(0) == 3 and a.pages_in_use == 3
+    a.shrink(0, 9)                              # rollback: keep 2 pages
+    assert a.slot_pages(0) == 2 and a.free_pages == N_PAGES - 2
+    a.release(0)
+    assert a.pages_in_use == 0 and a.free_pages == N_PAGES
+    assert (a.table == FREE).all()
+    assert a.peak_in_use == 3
+    a.check()
+
+
+def test_ensure_is_atomic_on_exhaustion():
+    a = PageAllocator(4, PS, 2, MAXP)
+    assert a.admit(0, 3 * PS)                   # 3 of 4 pages
+    assert not a.ensure(1, 2 * PS)              # needs 2, only 1 free
+    assert a.slot_pages(1) == 0                 # nothing grabbed
+    assert a.free_pages == 1
+    assert a.ensure(1, PS)                      # 1 page still fits
+    a.check()
+
+
+def test_shrink_is_idempotent_no_double_free():
+    a = PageAllocator(N_PAGES, PS, N_SLOTS, MAXP)
+    a.admit(1, 4 * PS)
+    a.shrink(1, PS)
+    a.shrink(1, PS)                             # second call: no-op
+    assert a.slot_pages(1) == 1
+    a.release(1)
+    a.release(1)                                # double release: no-op
+    assert a.free_pages == N_PAGES
+    a.check()
+
+
+def test_lifo_reuse_returns_the_page_just_freed():
+    a = PageAllocator(N_PAGES, PS, N_SLOTS, MAXP)
+    a.admit(0, 2 * PS)
+    last = int(a.table[0, 1])
+    a.shrink(0, PS)
+    assert a.ensure(0, 2 * PS)
+    assert int(a.table[0, 1]) == last           # same physical page back
+
+
+def test_slots_never_share_pages():
+    a = PageAllocator(N_PAGES, PS, N_SLOTS, MAXP)
+    for s in range(3):
+        assert a.admit(s, 3 * PS)
+    owned = a.table[a.table != FREE]
+    assert len(set(owned.tolist())) == 9
+    a.check()
+
+
+def test_per_slot_width_overflow_asserts():
+    a = PageAllocator(N_PAGES, PS, N_SLOTS, MAXP)
+    with pytest.raises(AssertionError):
+        a.ensure(0, MAXP * PS + 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),
+                          st.integers(0, N_SLOTS - 1),
+                          st.integers(0, MAXP * PS)),
+                max_size=60))
+def test_allocator_random_ops_conserve_pages(ops):
+    """Random op sequences: page conservation (free + owned == pool,
+    each owned page exactly once), growth atomicity, and agreement with
+    a trivial token-capacity mirror model."""
+    a = PageAllocator(N_PAGES, PS, N_SLOTS, MAXP)
+    held = {s: 0 for s in range(N_SLOTS)}       # mirror: pages per slot
+    for op, slot, toks in ops:
+        need = pages_for(toks, PS)
+        if op == 0:                             # extend (grow)
+            before = a.slot_pages(slot)
+            ok = a.ensure(slot, toks)
+            if ok:
+                held[slot] = max(held[slot], need)
+            else:                               # atomic: nothing changed
+                assert a.slot_pages(slot) == before == held[slot]
+                assert need - before > a.free_pages
+        elif op == 1:                           # speculative rollback
+            a.shrink(slot, toks)
+            held[slot] = min(held[slot], need)
+        elif op == 2:                           # release
+            a.release(slot)
+            held[slot] = 0
+        else:                                   # fresh admit
+            a.release(slot)
+            ok = a.admit(slot, toks)
+            held[slot] = need if ok else 0
+        a.check()
+        assert a.slot_pages(slot) == held[slot]
+        assert a.pages_in_use == sum(held.values())
+        assert a.free_pages == N_PAGES - sum(held.values())
+        assert a.peak_in_use >= a.pages_in_use

@@ -193,6 +193,113 @@ def test_oversized_request_rejected_not_fatal(pair):
     assert reqs[0].state == reqs[2].state == RequestState.FINISHED
 
 
+# ----------------------------------------------------------------------
+# Paged KV pool (core.pages + paged engine slots)
+# ----------------------------------------------------------------------
+def test_paged_matches_contiguous_streams(pair):
+    """The tentpole equivalence: the SAME trace served from a paged KV
+    pool and from dense per-slot caches emits bit-identical per-request
+    token streams — paging changes memory layout, never text."""
+    trace_cfg = TraceConfig(
+        n_requests=4, rate_rps=6.0, prompt_len=10, min_new_tokens=4,
+        max_new_tokens=9, vocab=512, seed=3)
+    dense = ServeSession(_engine(pair), ServeConfig(
+        max_batch=2, cache_len=64)).run_trace(poisson_trace(trace_cfg))
+    paged = ServeSession(_engine(pair), ServeConfig(
+        max_batch=2, cache_len=64,
+        page_size=8)).run_trace(poisson_trace(trace_cfg))
+    assert dense.n_finished == paged.n_finished == 4
+    assert paged.n_preempted == 0
+    d = {r.rid: r.tokens for r in dense.requests}
+    p = {r.rid: r.tokens for r in paged.requests}
+    assert d == p
+    # short requests only hold the pages they used: the pool never saw
+    # the dense worst case (2 slots x 8 pages)
+    assert 0 < paged.peak_pages_in_use < paged.n_pages
+
+
+def test_paged_preemption_requeues_and_streams_match(pair):
+    """Tight pool: more slots than the pages can back.  Mid-flight page
+    exhaustion must preempt (not crash), re-queue, and the re-run must
+    still emit exactly the dense streams."""
+    trace_cfg = TraceConfig(
+        n_requests=5, rate_rps=8.0, prompt_len=10, min_new_tokens=4,
+        max_new_tokens=10, vocab=512, seed=3)
+    dense = ServeSession(_engine(pair), ServeConfig(
+        max_batch=2, cache_len=64)).run_trace(poisson_trace(trace_cfg))
+    tight = ServeSession(_engine(pair), ServeConfig(
+        max_batch=4, cache_len=64, page_size=8,
+        n_pages=9)).run_trace(poisson_trace(trace_cfg))
+    assert tight.n_finished == 5
+    assert tight.n_preempted >= 1
+    assert tight.peak_pages_in_use <= tight.n_pages == 9
+    d = {r.rid: r.tokens for r in dense.requests}
+    t = {r.rid: r.tokens for r in tight.requests}
+    assert d == t
+    preempted = [r for r in tight.requests if r.n_preempts > 0]
+    assert preempted and all(r.state == RequestState.FINISHED
+                             for r in preempted)
+
+
+def test_paged_same_tick_admissions_never_overcommit(pair):
+    """Regression: several requests arriving in ONE scheduling tick must
+    not all pass a stale free-page gate and crash admit_slot.  3
+    simultaneous arrivals, pool of 5 pages, 2-page prompts: only two fit
+    this tick; the third waits instead of raising."""
+    reqs = [_req(i, t=0.0, n=4, prompt_len=10) for i in range(3)]
+    sess = ServeSession(_engine(pair), ServeConfig(
+        max_batch=3, cache_len=24, page_size=8, n_pages=5))
+    rep = sess.run_trace(reqs)
+    assert rep.n_finished == 3 and rep.n_rejected == 0
+    assert rep.peak_active <= 2          # third could never co-reside
+
+
+def test_paged_engine_page_lifecycle(pair):
+    """Engine-level accounting: pages grow with the draft window, shrink
+    past n_keep on speculative rollback, and all return on release."""
+    eng = _engine(pair)
+    eng.init_slots(2, 64, page_size=8, n_pages=16)
+    r0 = _req(0, prompt_len=10)
+    eng.admit_slot(0, r0.prompt, r0.seed)
+    alloc = eng.alloc
+    assert alloc.slot_pages(0) == 2                  # 9 prefill tokens
+    for _ in range(3):
+        eng.run_round()
+        alloc.check()
+        pos = int(np.asarray(eng.pos)[0])
+        # rollback freed everything past the kept length
+        assert alloc.slot_pages(0) == alloc.pages_needed(pos)
+    assert alloc.peak_in_use > alloc.pages_in_use or \
+        alloc.peak_in_use >= alloc.pages_needed(pos)
+    eng.release_slot(0)
+    assert alloc.pages_in_use == 0 and alloc.free_pages == 16
+    alloc.check()
+
+
+def test_paged_int8_kv_matches_dense_int8(pair):
+    """int8 KV side tables page identically: scales ride in their own
+    pools and the paged int8 streams equal the dense int8 streams."""
+    import dataclasses as dc_mod
+    dcfg, dp, tcfg, tp = pair
+    dc8 = dc_mod.replace(dcfg, kv_cache_dtype="int8")
+    tc8 = dc_mod.replace(tcfg, kv_cache_dtype="int8")
+    streams = {}
+    for paged in (False, True):
+        eng = EdgeCloudEngine(dc8, dp, tc8, tp, METHOD,
+                              EngineConfig(L_max=L_MAX), seed=0)
+        if paged:
+            eng.init_slots(2, 64, page_size=8, n_pages=12)
+        else:
+            eng.init_slots(2, 64)
+        r = _req(7, prompt_len=9)
+        eng.admit_slot(1, r.prompt, r.seed)
+        for _ in range(3):
+            eng.run_round()
+        streams[paged] = list(eng.out_tokens[1])
+    assert streams[False] == streams[True]
+    assert len(streams[True]) >= 3
+
+
 def test_high_load_rejects_and_still_completes(pair):
     dc, dp, tc, tp = pair
     trace = poisson_trace(TraceConfig(
