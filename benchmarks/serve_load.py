@@ -1,26 +1,34 @@
-"""Serving-layer load study: batching policies and KV memory layouts.
+"""Serving-layer load study: batching policies, KV layouts, schedules.
 
-Two studies over the SAME seeded Poisson arrival traces, on the same
+Three studies over the SAME seeded Poisson arrival traces, on the same
 deterministic discrete-event clock (calibrated fixed per-round compute
 costs — host timing noise must not decide a scheduler comparison):
 
-  policy  continuous vs static batching across arrival rates: continuous
-          refills engine slots the moment a request completes; static
-          drains the whole batch first and pays for the idle slots at
-          high load.
+  policy    continuous vs static batching across arrival rates:
+            continuous refills engine slots the moment a request
+            completes; static drains the whole batch first and pays for
+            the idle slots at high load.
 
-  paged   paged KV pool vs dense per-slot caches under the SAME KV
-          memory budget (dense_slots x cache_len positions per layer).
-          Dense caches reserve the worst case for every slot, so the
-          budget backs only ``dense_slots`` concurrent requests; the
-          page pool holds each request's ACTUAL length, so the same
-          bytes admit more slots (preemption backstops the
-          oversubscription).  Headline: strictly more peak concurrency,
-          throughput no worse.
+  paged     paged KV pool vs dense per-slot caches under the SAME KV
+            memory budget (dense_slots x cache_len positions per layer).
+            Dense caches reserve the worst case for every slot, so the
+            budget backs only ``dense_slots`` concurrent requests; the
+            page pool holds each request's ACTUAL length, so the same
+            bytes admit more slots (preemption backstops the
+            oversubscription).  Headline: strictly more peak
+            concurrency, throughput no worse.
 
-Results go to experiments/bench/serve_load.csv and — for the perf
-trajectory CI tracks from this PR on — experiments/bench/BENCH_serve.json
-(throughput, p50/p95 latency, peak pages in use, preemptions).
+  pipeline  lockstep barrier rounds vs the event-driven pipelined loop
+            (serve/events.py) at the paper's default 1 Mbit/s uplink:
+            same packed wire payloads, same token streams bit for bit —
+            but edge drafting, uplink serialisation, cloud verify and
+            downlink overlap across requests (plus optimistic draft-
+            ahead), so mean end-to-end request latency must drop.
+
+Results go to experiments/bench/serve_load.csv and the perf-trajectory
+JSONs CI tracks: experiments/bench/BENCH_serve.json (throughput, p50/p95
+latency, peak pages, preemptions) and experiments/bench/
+BENCH_pipeline.json (lockstep-vs-pipelined latency, spec hit rate).
 
     PYTHONPATH=src python -m benchmarks.serve_load --smoke
     PYTHONPATH=src python -m benchmarks.serve_load            # trained pair
@@ -146,6 +154,55 @@ def paged_study(pair, n_requests, dense_slots, paged_slots, prompt_len,
     return out
 
 
+def pipeline_study(pair, n_requests, max_batch, prompt_len, min_new,
+                   max_new, rate, method, ecfg, t_slm, t_llm, cache_len):
+    """Lockstep vs event-driven pipelined serving on the SAME trace with
+    the SAME calibrated compute costs, over the paper's default 1 Mbit/s
+    uplink (ChannelConfig defaults).  Token streams must be identical;
+    mean end-to-end latency must be strictly lower pipelined."""
+    dc, dp, tc, tp = pair
+    channel = ChannelConfig()          # 1 Mbit/s up, the paper's regime
+    trace_cfg = TraceConfig(
+        n_requests=n_requests, rate_rps=rate, prompt_len=prompt_len,
+        min_new_tokens=min_new, max_new_tokens=max_new, vocab=tc.vocab,
+        seed=13)
+    out = {"uplink_bps": channel.uplink_bps, "rate_rps": rate,
+           "n_requests": n_requests, "max_batch": max_batch}
+    streams = {}
+    for pipeline in ("lockstep", "pipelined"):
+        eng = EdgeCloudEngine(dc, dp, tc, tp, method, ecfg, channel,
+                              seed=0)
+        sess = ServeSession(eng, ServeConfig(
+            max_batch=max_batch, cache_len=cache_len, pipeline=pipeline,
+            t_slm_s=t_slm, t_llm_s=t_llm))
+        rep = sess.run_trace(poisson_trace(trace_cfg))
+        streams[pipeline] = {r.rid: tuple(r.tokens) for r in rep.requests}
+        out[pipeline] = {
+            "latency_mean_s": rep.latency_mean_s,
+            "latency_p50_s": rep.latency_p50_s,
+            "latency_p95_s": rep.latency_p95_s,
+            "ttft_mean_s": rep.ttft_mean_s,
+            "uplink_wait_mean_s": rep.uplink_wait_mean_s,
+            "uplink_utilization": rep.uplink_utilization,
+            "throughput_tok_s": rep.throughput_tok_s,
+            "makespan_s": rep.makespan_s,
+            "n_rounds": rep.n_rounds,
+            "n_spec_hits": rep.n_spec_hits,
+            "n_spec_misses": rep.n_spec_misses,
+            "n_finished": rep.n_finished,
+        }
+    lk, pp = out["lockstep"], out["pipelined"]
+    out["verdict"] = {
+        "streams_identical": streams["lockstep"] == streams["pipelined"],
+        "latency_ratio": pp["latency_mean_s"]
+        / max(lk["latency_mean_s"], 1e-12),
+        "makespan_ratio": pp["makespan_s"] / max(lk["makespan_s"], 1e-12),
+        "ok": (streams["lockstep"] == streams["pipelined"]
+               and pp["latency_mean_s"] < lk["latency_mean_s"]),
+    }
+    return out
+
+
 def run(smoke: bool = False):
     if smoke:
         pair = _smoke_pair()
@@ -174,6 +231,11 @@ def run(smoke: bool = False):
                         t_llm, cache_len)
     paged = paged_study(pair, method=method, ecfg=ecfg, channel=channel,
                         t_slm=t_slm, t_llm=t_llm, **paged_args)
+    pipe = pipeline_study(pair, n_requests=n_requests,
+                          max_batch=max_batch, prompt_len=prompt_len,
+                          min_new=min_new, max_new=max_new,
+                          rate=max(rates), method=method, ecfg=ecfg,
+                          t_slm=t_slm, t_llm=t_llm, cache_len=cache_len)
     path = common.emit_csv("serve_load", rows, KEYS)
     jpath = os.path.join(os.path.dirname(path), "BENCH_serve.json")
     with open(jpath, "w") as f:
@@ -181,7 +243,12 @@ def run(smoke: bool = False):
                    "t_slm_s": t_slm, "t_llm_s": t_llm,
                    "policy_study": rows, "paged_study": paged}, f,
                   indent=2)
-    return rows, paged, path, jpath
+    ppath = os.path.join(os.path.dirname(path), "BENCH_pipeline.json")
+    with open(ppath, "w") as f:
+        json.dump({"schema": "BENCH_pipeline/v1", "smoke": smoke,
+                   "t_slm_s": t_slm, "t_llm_s": t_llm,
+                   "pipeline_study": pipe}, f, indent=2)
+    return rows, paged, pipe, path, jpath, ppath
 
 
 def main():
@@ -189,7 +256,7 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="random-init smoke pair, reduced grid")
     args = ap.parse_args()
-    rows, paged, path, jpath = run(smoke=args.smoke)
+    rows, paged, pipe, path, jpath, ppath = run(smoke=args.smoke)
     for r in rows:
         print(f"{r['policy']:10s} rate={r['rate_rps']:5.1f}/s "
               f"tok/s={r['throughput_tok_s']:7.2f} "
@@ -219,8 +286,23 @@ def main():
     print(f"[{'PASS' if v['ok'] else 'FAIL'}-PAGED] paged/contiguous: "
           f"concurrency +{pg['peak_active'] - ct['peak_active']}, "
           f"throughput ratio = {v['throughput_ratio']:.2f}x")
+    # headline 3: at the default 1 Mbit/s uplink, the event-driven
+    # pipelined schedule must cut mean request latency vs lockstep while
+    # emitting bit-identical token streams
+    lk, pp, pv = pipe["lockstep"], pipe["pipelined"], pipe["verdict"]
+    print(f"pipeline   uplink={pipe['uplink_bps']:.0f}bps "
+          f"rate={pipe['rate_rps']}/s: mean latency "
+          f"{lk['latency_mean_s']:.3f}s -> {pp['latency_mean_s']:.3f}s "
+          f"(x{pv['latency_ratio']:.2f}), makespan "
+          f"{lk['makespan_s']:.3f}s -> {pp['makespan_s']:.3f}s, "
+          f"spec {pp['n_spec_hits']}h/{pp['n_spec_misses']}m, "
+          f"streams_identical={pv['streams_identical']}")
+    print(f"[{'PASS' if pv['ok'] else 'FAIL'}-PIPELINED] "
+          f"pipelined/lockstep mean latency = {pv['latency_ratio']:.2f}x"
+          f" (identical streams: {pv['streams_identical']})")
     print("->", path)
     print("->", jpath)
+    print("->", ppath)
 
 
 if __name__ == "__main__":

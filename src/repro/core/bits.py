@@ -88,6 +88,50 @@ def uncompressed_bits(V: int, bits_per_prob: int = 16):
 
 
 # ----------------------------------------------------------------------
+# Wire-format budget (core/wire.py): the PACKED uplink message.
+#
+# The paper's eqs. (1)/(2)/(5) are entropy-optimal codes; the actual
+# wire protocol uses fixed-width fields (implementable, byte-exact,
+# O(K) to encode/decode).  These functions reproduce the packed sizes
+# analytically so tests can assert len(pack(p)) * 8 matches them bit
+# for bit, and so the documented overhead over the optimal budget —
+# K⌈log2 V⌉ vs log2 C(V,K) for the index list, K⌈log2(ℓ+1)⌉ vs
+# log2 C(ℓ+K−1, K−1) for the counts — is a checked quantity rather
+# than folklore.  Widths mirror wire.WireFormat exactly.
+# ----------------------------------------------------------------------
+def _width(max_value: int) -> int:
+    return max(int(max_value).bit_length(), 1)
+
+
+def wire_header_bits(L_max: int) -> int:
+    """Draft-count field n ∈ [0, L_max]."""
+    return _width(L_max)
+
+
+def wire_beta_bits(n_drafts: int) -> int:
+    """β trajectory β_0..β_n as raw float32 bit patterns."""
+    return 32 * (n_drafts + 1)
+
+
+def wire_token_bits(V: int, K: int, ell: int) -> int:
+    """Packed bits for ONE draft position: token id + K field + index
+    list (elided for the dense K = V support) + lattice counts."""
+    tok, kf, cnt = _width(V - 1), _width(V), _width(ell)
+    idx = 0 if K == V else K * tok
+    return tok + kf + idx + K * cnt
+
+
+def wire_raw_token_bits(V: int) -> int:
+    """Raw mode ("uncompressed"): token id + V float32 probabilities."""
+    return _width(V - 1) + 32 * V
+
+
+def wire_verdict_bits(V: int, L_max: int) -> int:
+    """Packed downlink verdict: T + resampled/bonus token + β_T."""
+    return _width(L_max) + _width(V - 1) + 32
+
+
+# ----------------------------------------------------------------------
 # Beyond-paper: gap-coded subset indices.
 #
 # The paper charges log2 C(V,K) for the support set — optimal only if all

@@ -11,6 +11,18 @@ request's per-round payload is serialised FIFO.  ``SharedUplink`` tracks
 the busy-until time of the link so each transmission sees the queueing
 delay induced by the requests scheduled ahead of it — this is what turns
 the paper's bit budgets into per-request latency under load.
+
+What rides the links (since the engine disaggregation): the UPLINK
+carries packed ``wire.DraftPayload`` bytes and the DOWNLINK packed
+``wire.VerdictPayload`` bytes — serving charges ``len(bytes) * 8``, not
+the analytic ``core.bits`` formulas.  ``feedback_bits`` below remains
+the minimal information-theoretic verdict size, kept as the modeled
+fallback when no payload exists (e.g. an idle-round estimate).
+
+Contract corners pinned by tests/test_serve.py: a zero-bit payload
+still occupies the link for ``per_msg_overhead_bits`` (framing is real
+bytes); ``utilization`` over an empty or degenerate window is 0.0,
+never NaN.
 """
 from __future__ import annotations
 
@@ -67,6 +79,7 @@ class SharedUplink:
         self.busy_total_s = 0.0
 
     def transmit(self, now_s: float, bits: float) -> Transmission:
+        assert bits >= 0.0, f"negative payload ({bits} bits)"
         start = max(now_s, self.busy_until_s)
         dur = (bits + self.ch.per_msg_overhead_bits) / self.ch.uplink_bps
         end = start + dur

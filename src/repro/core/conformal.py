@@ -41,6 +41,18 @@ def backtrack(beta_traj, n_keep):
     return jnp.take_along_axis(beta_traj, idx[None, :], axis=0)[0]
 
 
+def backtrack_wire(betas, n_accept: int) -> float:
+    """Host-side backtrack over a WIRE β trajectory (core.wire): the
+    edge transmits β_0..β_n (index i = threshold after the i-th
+    in-round update) inside its DraftPayload; after verifying T ≤ n
+    accepted drafts the cloud returns β_T in the VerdictPayload — the
+    Algorithm-1 lines 12–13 backtrack, computed cloud-side from wire
+    data so the edge never replays updates.  float32-exact: the value
+    returned is bit-identical to the one the edge recorded."""
+    assert 0 <= n_accept < len(betas), (n_accept, len(betas))
+    return float(betas[n_accept])
+
+
 def admit_rows(beta, fresh_mask, beta0: float):
     """Per-request β state for continuous batching: rows where
     ``fresh_mask`` is True belong to a newly-admitted request and restart

@@ -1,51 +1,56 @@
-"""Edge–cloud SQS speculative decoding engine (paper Algorithm 1).
+"""Disaggregated edge–cloud SQS speculative decoding engine.
 
-One engine instance wires together:
-  - the edge SLM (draft model, any repro architecture),
-  - a sparsify-quantize-sample method (K-SQS / C-SQS / dense-QS / raw),
-  - the modeled uplink channel,
-  - the cloud LLM (target model) with parallel verification.
+The paper's Algorithm 1 is realised as TWO actors with a typed wire
+boundary (``core.wire``) between them — the shape a real edge-cloud
+deployment has, rather than one object that drafts and verifies in
+lock-step:
 
-Per SD batch t (one ``round``):
-  edge   : scan L_max+1 decode steps — step i processes token i of
-           [x_last, d_1 … d_L]; each step computes q_n, sparsifies
-           (threshold β_n for C-SQS, with eq.-8 updates applied inline),
-           lattice-quantizes to q̂_n, samples d_{n} ~ q̂_n, accrues bits.
-           The (L_max+1)-th step only advances cache/state past d_L.
-  budget : L^t = max prefix of drafts with Σ bits ≤ B  (paper §4).
-  uplink : Σ live bits → modeled channel time.
-  cloud  : ONE extend_step over [x_last, d_1 … d_L] (parallel verify),
-           accept/reject per Leviathan-et-al. against q̂, resample from
-           the residual or sample the bonus token.
-  sync   : β backtracks to the value after the last kept update
-           (Algorithm 1 lines 12–13); caches roll back — positionally for
-           attention KV, via per-step state snapshots for SSM/hybrid
-           blocks (beyond-paper: makes SD correct for Mamba/xLSTM/Jamba
-           targets, DESIGN.md §5).
+  ``EdgeDraftEngine``   — the device side: SLM decode scan, SQS
+      sparsify/quantize (``core.sqs`` + ``core.slq``), conformal β
+      state, bit-budget truncation L^t, payload packing, optimistic
+      continuation (speculative drafting of round t+1 while round t is
+      in flight), and verdict application (emit, β resume, rollback).
 
-Serving / continuous batching (repro.serve): every piece of per-sequence
-state — RNG key, conformal β, cache slot, position, x_last — is keyed by
-batch ROW, and ``run_round`` takes an active mask, so rows double as
-SESSION SLOTS that requests join and leave mid-flight:
+  ``CloudVerifyEngine`` — the datacenter side: payload unpacking, LLM
+      parallel verify (``core.verify``), paged-KV rollback, conformal β
+      backtrack (Alg. 1 lines 12–13, computed from the wire β
+      trajectory), verdict packing.
 
-    init_slots(n_slots, cache_len)   allocate empty per-slot caches
-    admit_slot(slot, prompt, seed)   batch-1 prefill scattered into slot
-    run_round()                      one SD batch over the active slots
-    release_slot(slot)               free the slot (request finished)
+They communicate ONLY through ``wire.DraftPayload`` / ``VerdictPayload``
+bytes: every round the draft distributions cross the boundary as packed
+lattice counts and are reconstructed bit-exactly on the cloud, so the
+Quantize-and-Sample acceptance guarantee holds against the *transmitted*
+q̂, and ``len(bytes) * 8`` — not a formula — is what the serving layer
+charges to the shared uplink.
 
-Per-row RNG (jax.random.fold_in per row, vmapped splits thereafter)
-guarantees a request's token stream is independent of which other
-requests share the batch — the masked-batch equivalence property the
-scheduler tests assert.  The request/arrival lifecycle, admission
-control, and the contended-uplink clock live in ``repro.serve``
-(scheduler.py, session.py); this engine only exposes the slot API.
+``EdgeCloudEngine`` remains the public facade: same constructor, the
+same ``prefill / run_round / run`` batch API and the same
+``init_slots / admit_slot / release_slot`` session-slot API as before
+the split — it owns the slot lifecycle and the (mirrored) page
+allocator and moves payloads between the two actors in lockstep.  The
+event-driven serving loop (``repro.serve.events``) instead drives the
+per-slot methods (``draft_slots`` / ``verify_slots`` /
+``apply_verdict_slot`` / speculative drafting) so draft, uplink, verify
+and downlink of different requests overlap in time.
+
+Replay discipline (what makes out-of-lockstep calls safe): every jitted
+step runs the full static batch, so rows outside the call's commit mask
+still flow through the compute.  Each actor keeps *replay registers* —
+the exact inputs (token, position, β, PRNG key) of every row's last
+committed step.  Non-committed rows are fed their registers, so they
+bit-identically re-execute their previous step: the recompute rewrites
+the same cache values it wrote before, and nothing the row later reads
+is perturbed.  This is why a request's token stream is independent of
+which other requests share the batch AND of how calls interleave in
+time — the property the lockstep-vs-pipelined and solo-vs-batched
+equivalence tests assert.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +62,7 @@ from repro.core import channel as channel_mod
 from repro.core import conformal
 from repro.core import sqs as sqs_mod
 from repro.core import verify as verify_mod
+from repro.core import wire as wire_mod
 from repro.core.pages import PageAllocator
 from repro.models import model as model_mod
 from repro.models.attention import PagedSpec, sanitize_page_table
@@ -99,6 +105,12 @@ def row_key(seed: int, row: int = 0):
     return jax.random.fold_in(jax.random.PRNGKey(seed), row)
 
 
+def cloud_row_key(seed: int, row: int = 0):
+    """The cloud actor's independent per-row PRNG root (verification
+    randomness lives in the datacenter, never on the wire)."""
+    return jax.random.fold_in(row_key(seed, row), 0x0C10)
+
+
 def _split_rows(keys, num: int = 2):
     """keys: (B, 2) -> (num, B, 2) independent per-row subkeys."""
     kk = jax.vmap(lambda k: jax.random.split(k, num))(keys)
@@ -125,26 +137,84 @@ def rollback_cache(cfg: ModelConfig, cache, traj, n_keep):
     return out
 
 
-class EdgeCloudEngine:
-    def __init__(self, draft_cfg: ModelConfig, draft_params,
-                 target_cfg: ModelConfig, target_params,
-                 method: MethodConfig, engine: EngineConfig = EngineConfig(),
-                 channel: channel_mod.ChannelConfig =
-                 channel_mod.ChannelConfig(),
-                 seed: int = 0):
-        assert draft_cfg.vocab == target_cfg.vocab, "shared vocabulary"
-        self.dc, self.tc = draft_cfg, target_cfg
-        self.dp, self.tp = draft_params, target_params
-        self.m, self.e, self.ch = method, engine, channel
-        self.seed = seed
-        self.V = draft_cfg.vocab
-        self._draft_jit = jax.jit(self._draft_round)
-        self._verify_jit = jax.jit(self._verify_round)
-        self._target_stateful = _is_stateful(target_cfg)
-        self.paged = False
-        self.alloc: Optional[PageAllocator] = None
+# ======================================================================
+# Host-side round records (what crosses between serving-loop events)
+# ======================================================================
+@dataclasses.dataclass
+class PendingRound:
+    """Edge-side record of one in-flight SD round for one slot: enough
+    to apply the verdict (emit tokens) and to seed the optimistic
+    continuation.  ``drafts`` has L_max+1 entries — index n_live is the
+    edge's own continuation sample at the bonus position (the
+    speculation guess)."""
+    slot: int
+    drafts: np.ndarray            # (L_max+1,) int
+    betas: np.ndarray             # (L_max+1,) f32 trajectory
+    n_live: int                   # L^t — drafts actually transmitted
+    packed: bytes                 # the DraftPayload on the wire
+    wire_bits: float              # len(packed) * 8
+    t_slm: float                  # measured draft wall-clock
 
-    # ------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpecDraft:
+    """An uncommitted speculative draft of round t+1 (optimistic
+    full-accept continuation).  Committed only when the round-t verdict
+    confirms the premise; otherwise dropped on the floor — its cache
+    writes sit beyond the committed position and are masked/overwritten."""
+    slot: int
+    in_x: int                     # premise: bonus token guess
+    in_pos: int                   # premise: pos after full accept
+    in_beta: float                # premise: β after full accept
+    base_key: jnp.ndarray         # (2,) key consumed (replay register)
+    new_key: jnp.ndarray          # (2,) key chain advance on commit
+    round: PendingRound           # the speculative round's record
+
+
+@dataclasses.dataclass
+class DraftBatch:
+    """Full-batch draft results (lockstep path + payload source)."""
+    ys: dict                      # device trajectories from the scan
+    drafts: np.ndarray            # (L+1, B)
+    betas: np.ndarray             # (L+1, B)
+    bits: np.ndarray              # (B, L) analytic per-token budget
+    gap_bits: np.ndarray          # (B, L)
+    dropped: np.ndarray           # (B, L+1)
+    Ks: np.ndarray                # (B, L)
+    live: np.ndarray              # (B, L) bool
+    n_live: np.ndarray            # (B,) int
+    packed: Dict[int, bytes]      # per committed slot
+    t_slm: float
+
+
+@dataclasses.dataclass
+class VerifyBatch:
+    """Cloud-side verify results for one call."""
+    verdicts: Dict[int, wire_mod.VerdictPayload]
+    T: np.ndarray                 # (B,) accepted counts
+    new_token: np.ndarray         # (B,)
+    rejected: np.ndarray          # (B,) bool
+    p: Optional[np.ndarray]       # (B, L+1, V) when collect_theory
+    t_llm: float
+
+
+# ======================================================================
+# Edge actor
+# ======================================================================
+class EdgeDraftEngine:
+    """SLM drafting + SQS compression + conformal state + packing."""
+
+    def __init__(self, dc: ModelConfig, dp, method: MethodConfig,
+                 engine: EngineConfig, fmt: wire_mod.WireFormat,
+                 seed: int = 0):
+        self.dc, self.dp = dc, dp
+        self.m, self.e, self.fmt = method, engine, fmt
+        self.seed = seed
+        self.V = dc.vocab
+        self.stateful = _is_stateful(dc)
+        self._draft_jit = jax.jit(self._draft_round)
+
+    # -- SQS -----------------------------------------------------------
     def _sparsify(self, q, beta, logits=None):
         m = self.m
         if m.use_kernels and m.name in ("ksqs", "csqs") and logits is not None:
@@ -193,8 +263,8 @@ class EdgeCloudEngine:
         return r, bits, gap_bits
 
     def _draft_round(self, dp, cache, x_last, pos, beta, keys):
-        """Returns drafts d_1..d_L, per-token q̂/q/bits/β trajectory and the
-        advanced edge cache (+ per-step sequential-state snapshots).
+        """Returns drafts d_1..d_L, per-token q̂/q/bits/β trajectory and
+        the advanced edge cache (+ per-step sequential-state snapshots).
         keys: (B, 2) per-row PRNG keys — each row consumes only its own
         stream (masked-batch equivalence for serving)."""
         L = self.e.L_max
@@ -223,9 +293,237 @@ class EdgeCloudEngine:
         cache = carry[0]
         return cache, ys
 
+    # -- slot/state lifecycle ------------------------------------------
+    def _alloc_state(self, B: int):
+        self.B = B
+        self.x_last = jnp.zeros((B,), jnp.int32)
+        self.pos = jnp.zeros((B,), jnp.int32)
+        self.beta = jnp.full((B,), self.m.beta0, jnp.float32)
+        self.keys = jnp.stack([row_key(self.seed, b) for b in range(B)])
+        # replay registers: inputs of each row's last committed draft
+        self.rep_x = self.x_last
+        self.rep_pos = self.pos
+        self.rep_beta = self.beta
+        self.rep_key = self.keys
+
+    def init_slots(self, n_slots: int, cache_len: int,
+                   spec: Optional[PagedSpec]):
+        self._alloc_state(n_slots)
+        self.cache_len = cache_len
+        self.dcache = model_mod.init_cache(self.dc, n_slots, cache_len,
+                                           paged=spec)
+        self._prefill_jit = jax.jit(functools.partial(
+            model_mod.prefill, self.dc, cache_len=cache_len))
+
+    def prefill_batch(self, prompts, cache_len: int):
+        B, S0 = prompts.shape
+        self._alloc_state(B)
+        self.cache_len = cache_len
+        _, self.dcache = model_mod.prefill(self.dc, self.dp,
+                                           prompts[:, :-1],
+                                           cache_len=cache_len)
+        self.x_last = prompts[:, -1].astype(jnp.int32)
+        self.pos = jnp.full((B,), S0 - 1, jnp.int32)
+        self.rep_x, self.rep_pos = self.x_last, self.pos
+
+    def admit(self, slot: int, prompt, pt_row, seed: int):
+        S0 = int(prompt.shape[0])
+        _, cache1 = self._prefill_jit(self.dp, prompt[None, :-1])
+        self.dcache = model_mod.write_prefill_to_slot(
+            self.dc, self.dcache, cache1, slot, pt_row, S0 - 1)
+        key = row_key(seed, 0)
+        self.x_last = self.x_last.at[slot].set(prompt[-1])
+        self.pos = self.pos.at[slot].set(S0 - 1)
+        self.beta = conformal.admit_rows(
+            self.beta, jnp.arange(self.B) == slot, self.m.beta0)
+        self.keys = self.keys.at[slot].set(key)
+        self.rep_x = self.rep_x.at[slot].set(prompt[-1])
+        self.rep_pos = self.rep_pos.at[slot].set(S0 - 1)
+        self.rep_beta = self.rep_beta.at[slot].set(self.m.beta0)
+        self.rep_key = self.rep_key.at[slot].set(key)
+
+    def set_tables(self, pt):
+        self.dcache = model_mod.set_page_tables(self.dcache, pt)
+
+    # -- drafting ------------------------------------------------------
+    def _run_draft(self, x_in, pos_in, beta_in, key_in):
+        new_keys, kd = _split_rows(key_in)
+        t0 = time.perf_counter()
+        dcache, ys = self._draft_jit(self.dp, self.dcache, x_in, pos_in,
+                                     beta_in, kd)
+        jax.block_until_ready(ys["token"])
+        t_slm = time.perf_counter() - t0
+        self.dcache = dcache
+        return ys, new_keys, t_slm
+
+    def _live_counts(self, bits: np.ndarray, mask: np.ndarray):
+        """Budget-driven L^t (paper §4): stop when analytic bits exceed
+        the budget, ≥ 1; non-committed rows transmit nothing."""
+        cum = np.cumsum(bits, axis=1)
+        live = cum <= self.e.bit_budget
+        live[:, 0] = True
+        live &= mask[:, None]
+        return live, live.sum(1)
+
+    def _build_batch(self, ys, mask: np.ndarray, t_slm: float) -> DraftBatch:
+        L = self.e.L_max
+        drafts = np.asarray(ys["token"])                  # (L+1, B)
+        betas = np.asarray(ys["beta"])                    # (L+1, B)
+        bits = np.asarray(ys["bits"][:L]).T               # (B, L)
+        gap_bits = np.asarray(ys["gap_bits"][:L]).T
+        dropped = np.asarray(ys["dropped"]).T             # (B, L+1)
+        Ks = np.asarray(ys["K"][:L]).T
+        live, n_live = self._live_counts(bits, mask)
+        packed = {}
+        for slot in np.nonzero(mask)[0]:
+            # slice the committed row ON DEVICE: per-slot drafts
+            # (pipelined serving) must not ship the whole (L, B, V)
+            # batch of distributions to host every call
+            qhat_row = np.asarray(ys["q_hat"][:L, int(slot)])
+            payload = wire_mod.build_draft_payload(
+                self.fmt, drafts[:, slot], qhat_row, betas[:, slot],
+                int(n_live[slot]))
+            packed[int(slot)] = self.fmt.pack_draft(payload)
+        return DraftBatch(ys=ys, drafts=drafts, betas=betas, bits=bits,
+                          gap_bits=gap_bits, dropped=dropped, Ks=Ks,
+                          live=live, n_live=n_live, packed=packed,
+                          t_slm=t_slm)
+
+    def draft(self, mask: np.ndarray) -> DraftBatch:
+        """One draft round, committing key-chain/replay state for rows
+        in ``mask``; other rows replay their registers (bit-identical
+        recompute, no state advance)."""
+        mj = jnp.asarray(mask)
+        x_in = jnp.where(mj, self.x_last, self.rep_x)
+        pos_in = jnp.where(mj, self.pos, self.rep_pos)
+        beta_in = jnp.where(mj, self.beta, self.rep_beta)
+        key_in = jnp.where(mj[:, None], self.keys, self.rep_key)
+        ys, new_keys, t_slm = self._run_draft(x_in, pos_in, beta_in, key_in)
+        self.keys = jnp.where(mj[:, None], new_keys, self.keys)
+        self.rep_x = x_in
+        self.rep_pos = pos_in
+        self.rep_beta = beta_in
+        self.rep_key = jnp.where(mj[:, None], key_in, self.rep_key)
+        return self._build_batch(ys, mask, t_slm)
+
+    def pending_round(self, batch: DraftBatch, slot: int) -> PendingRound:
+        return PendingRound(slot=slot,
+                            drafts=batch.drafts[:, slot].copy(),
+                            betas=batch.betas[:, slot].copy(),
+                            n_live=int(batch.n_live[slot]),
+                            packed=batch.packed[slot],
+                            wire_bits=wire_mod.packed_bits(
+                                batch.packed[slot]),
+                            t_slm=batch.t_slm)
+
+    def draft_speculative(self, slot: int, x_guess: int, pos_next: int,
+                          beta_next: float) -> SpecDraft:
+        """Optimistic continuation: draft round t+1 under the premise
+        that every live round-t draft is accepted and the bonus token
+        equals the edge's own continuation sample.  Commits NOTHING —
+        the key chain advance is stored in the record and applied only
+        by ``commit_speculative`` when the verdict confirms the
+        premise.  (Cache writes land beyond the committed position and
+        are masked / overwritten if the premise fails.)"""
+        assert not self.stateful, \
+            "speculative continuation requires a positional (KV) draft " \
+            "cache — sequential-state drafts must run lockstep"
+        onehot = np.zeros((self.B,), bool)
+        onehot[slot] = True
+        mj = jnp.asarray(onehot)
+        x_in = jnp.where(mj, jnp.int32(x_guess), self.rep_x)
+        pos_in = jnp.where(mj, jnp.int32(pos_next), self.rep_pos)
+        beta_in = jnp.where(mj, jnp.float32(beta_next), self.rep_beta)
+        key_in = jnp.where(mj[:, None], self.keys, self.rep_key)
+        base_key = self.keys[slot]
+        ys, new_keys, t_slm = self._run_draft(x_in, pos_in, beta_in, key_in)
+        batch = self._build_batch(ys, onehot, t_slm)
+        return SpecDraft(slot=slot, in_x=int(x_guess), in_pos=int(pos_next),
+                         in_beta=float(beta_next), base_key=base_key,
+                         new_key=new_keys[slot],
+                         round=self.pending_round(batch, slot))
+
+    def commit_speculative(self, spec: SpecDraft):
+        """The verdict confirmed the premise: advance the key chain and
+        replay registers exactly as a real draft() commit would have."""
+        s = spec.slot
+        self.keys = self.keys.at[s].set(spec.new_key)
+        self.rep_x = self.rep_x.at[s].set(spec.in_x)
+        self.rep_pos = self.rep_pos.at[s].set(spec.in_pos)
+        self.rep_beta = self.rep_beta.at[s].set(spec.in_beta)
+        self.rep_key = self.rep_key.at[s].set(spec.base_key)
+
+    # -- verdict application -------------------------------------------
+    def apply_verdict_slot(self, slot: int,
+                           verdict: wire_mod.VerdictPayload,
+                           rec: PendingRound) -> List[int]:
+        """Per-slot verdict (event-driven serving).  Positional caches
+        need no rollback; sequential-state drafts are lockstep-only."""
+        assert not self.stateful
+        T = int(verdict.n_accept)
+        self.pos = self.pos.at[slot].add(T + 1)
+        self.x_last = self.x_last.at[slot].set(jnp.int32(verdict.new_token))
+        if self.m.name == "csqs":
+            self.beta = self.beta.at[slot].set(
+                jnp.float32(verdict.beta_next))
+        return [int(t) for t in rec.drafts[:T]] + [int(verdict.new_token)]
+
+    def apply_verdicts_batch(self, mask: np.ndarray,
+                             verdicts: Dict[int, wire_mod.VerdictPayload],
+                             batch: DraftBatch) -> List[List[int]]:
+        """Whole-batch verdict application (lockstep path): masked
+        rollback of sequential-state snapshots, β resume from the wire,
+        position/x_last advance, token emission."""
+        B = self.B
+        T_np = np.zeros((B,), np.int32)
+        nt_np = np.zeros((B,), np.int32)
+        beta_np = np.asarray(self.beta).copy()
+        for slot, v in verdicts.items():
+            T_np[slot] = v.n_accept
+            nt_np[slot] = v.new_token
+            beta_np[slot] = np.float32(v.beta_next)
+        mj = jnp.asarray(mask)
+        T = jnp.asarray(T_np)
+        T_eff = jnp.where(mj, T, 0)
+        edge_traj = ({p_: batch.ys["snap"][p_]
+                      for p_ in _seq_periods(self.dc)}
+                     if self.stateful else None)
+        if edge_traj is not None:
+            edge_traj = jax.tree.map(
+                lambda a: jnp.moveaxis(a, 0, 2), edge_traj)  # (N,B,L+1,...)
+        self.dcache = rollback_cache(self.dc, self.dcache, edge_traj,
+                                     T_eff + 1)
+        if self.m.name == "csqs":
+            self.beta = jnp.where(mj, jnp.asarray(beta_np), self.beta)
+        self.pos = self.pos + jnp.where(mj, T + 1, 0)
+        self.x_last = jnp.where(mj, jnp.asarray(nt_np), self.x_last)
+        emitted = [[] for _ in range(B)]
+        for slot in verdicts:
+            emitted[slot] = ([int(t) for t in batch.drafts[:T_np[slot],
+                                                           slot]]
+                             + [int(nt_np[slot])])
+        return emitted
+
+
+# ======================================================================
+# Cloud actor
+# ======================================================================
+class CloudVerifyEngine:
+    """LLM parallel verification against the transmitted q̂."""
+
+    def __init__(self, tc: ModelConfig, tp, method: MethodConfig,
+                 engine: EngineConfig, fmt: wire_mod.WireFormat,
+                 seed: int = 0):
+        self.tc, self.tp = tc, tp
+        self.m, self.e, self.fmt = method, engine, fmt
+        self.seed = seed
+        self.V = tc.vocab
+        self.stateful = _is_stateful(tc)
+        self._verify_jit = jax.jit(self._verify_round)
+
     def _verify_round(self, tp, cache, tokens_in, pos, q_hat, live, key):
         """tokens_in: (B, L+1) = [x_last, d_1..d_L]."""
-        if self._target_stateful:
+        if self.stateful:
             logits, cache, traj = model_mod.extend_step(
                 self.tc, tp, tokens_in, cache, pos, collect_traj=True)
         else:
@@ -236,25 +534,189 @@ class EdgeCloudEngine:
         res = verify_mod.verify(key, tokens_in[:, 1:], q_hat, p, live)
         return res, p, cache, traj
 
+    # -- slot/state lifecycle ------------------------------------------
+    def _alloc_state(self, B: int):
+        L = self.e.L_max
+        self.B = B
+        self.x_last = jnp.zeros((B,), jnp.int32)
+        self.pos = jnp.zeros((B,), jnp.int32)
+        self.keys = jnp.stack([cloud_row_key(self.seed, b)
+                               for b in range(B)])
+        # replay registers: inputs of each row's last committed verify
+        self.rep_tokens = jnp.zeros((B, L), jnp.int32)
+        self.rep_qhat = jnp.zeros((B, L, self.V), jnp.float32)
+        self.rep_live = jnp.zeros((B, L), jnp.bool_)
+        self.rep_x = self.x_last
+        self.rep_pos = self.pos
+        self.rep_key = self.keys
+
+    def init_slots(self, n_slots: int, cache_len: int,
+                   spec: Optional[PagedSpec]):
+        self._alloc_state(n_slots)
+        self.cache_len = cache_len
+        self.tcache = model_mod.init_cache(self.tc, n_slots, cache_len,
+                                           paged=spec)
+        self._prefill_jit = jax.jit(functools.partial(
+            model_mod.prefill, self.tc, cache_len=cache_len))
+
+    def prefill_batch(self, prompts, cache_len: int):
+        B, S0 = prompts.shape
+        self._alloc_state(B)
+        self.cache_len = cache_len
+        _, self.tcache = model_mod.prefill(self.tc, self.tp,
+                                           prompts[:, :-1],
+                                           cache_len=cache_len)
+        self.x_last = prompts[:, -1].astype(jnp.int32)
+        self.pos = jnp.full((B,), S0 - 1, jnp.int32)
+        self.rep_x, self.rep_pos = self.x_last, self.pos
+
+    def admit(self, slot: int, prompt, pt_row, seed: int):
+        S0 = int(prompt.shape[0])
+        _, cache1 = self._prefill_jit(self.tp, prompt[None, :-1])
+        self.tcache = model_mod.write_prefill_to_slot(
+            self.tc, self.tcache, cache1, slot, pt_row, S0 - 1)
+        key = cloud_row_key(seed, 0)
+        self.x_last = self.x_last.at[slot].set(prompt[-1])
+        self.pos = self.pos.at[slot].set(S0 - 1)
+        self.keys = self.keys.at[slot].set(key)
+        self.rep_tokens = self.rep_tokens.at[slot].set(0)
+        self.rep_qhat = self.rep_qhat.at[slot].set(0.0)
+        self.rep_live = self.rep_live.at[slot].set(False)
+        self.rep_x = self.rep_x.at[slot].set(prompt[-1])
+        self.rep_pos = self.rep_pos.at[slot].set(S0 - 1)
+        self.rep_key = self.rep_key.at[slot].set(key)
+
+    def set_tables(self, pt):
+        self.tcache = model_mod.set_page_tables(self.tcache, pt)
+
+    # -- verification --------------------------------------------------
+    def verify(self, mask: np.ndarray,
+               payloads: Dict[int, wire_mod.DraftPayload],
+               collect_p: bool = False) -> VerifyBatch:
+        """Verify the rows in ``mask`` against their unpacked payloads;
+        other rows replay their registers.  Commits cloud mirrors
+        (pos/x_last), the key chain, the (rolled-back) target cache and
+        the replay registers for ``mask`` rows, and packs one verdict
+        per payload — including the Alg.-1 β backtrack computed from
+        the wire trajectory."""
+        B, L = self.B, self.e.L_max
+        tok_np = np.zeros((B, L), np.int32)
+        qhat_np = np.zeros((B, L, self.V), np.float32)
+        live_np = np.zeros((B, L), bool)
+        for slot, p in payloads.items():
+            assert mask[slot], f"payload for non-committed slot {slot}"
+            tok_np[slot], qhat_np[slot], live_np[slot] = \
+                wire_mod.draft_arrays(self.fmt, p)
+        mj = jnp.asarray(mask)
+        tokens = jnp.where(mj[:, None], jnp.asarray(tok_np),
+                           self.rep_tokens)
+        qhat = jnp.where(mj[:, None, None], jnp.asarray(qhat_np),
+                         self.rep_qhat)
+        live = jnp.where(mj[:, None], jnp.asarray(live_np), self.rep_live)
+        x_in = jnp.where(mj, self.x_last, self.rep_x)
+        pos_in = jnp.where(mj, self.pos, self.rep_pos)
+        key_in = jnp.where(mj[:, None], self.keys, self.rep_key)
+        new_keys, kv = _split_rows(key_in)
+        tokens_in = jnp.concatenate([x_in[:, None], tokens], axis=1)
+        t0 = time.perf_counter()
+        res, p_dists, tcache, traj = self._verify_jit(
+            self.tp, self.tcache, tokens_in, pos_in, qhat, live, kv)
+        jax.block_until_ready(res.n_accept)
+        t_llm = time.perf_counter() - t0
+        T = res.n_accept
+        T_eff = jnp.where(mj, T, 0)
+        self.tcache = rollback_cache(self.tc, tcache, traj, T_eff + 1)
+        self.pos = jnp.where(mj, pos_in + T + 1, self.pos)
+        self.x_last = jnp.where(mj, res.new_token, self.x_last)
+        self.keys = jnp.where(mj[:, None], new_keys, self.keys)
+        self.rep_tokens = tokens
+        self.rep_qhat = qhat
+        self.rep_live = live
+        self.rep_x = x_in
+        self.rep_pos = pos_in
+        self.rep_key = jnp.where(mj[:, None], key_in, self.rep_key)
+        T_np = np.asarray(T)
+        nt_np = np.asarray(res.new_token)
+        rej_np = np.asarray(res.rejected)
+        verdicts = {
+            slot: wire_mod.VerdictPayload(
+                n_accept=int(T_np[slot]),
+                new_token=int(nt_np[slot]),
+                beta_next=conformal.backtrack_wire(p.betas,
+                                                   int(T_np[slot])))
+            for slot, p in payloads.items()
+        }
+        return VerifyBatch(verdicts=verdicts, T=T_np, new_token=nt_np,
+                           rejected=rej_np,
+                           p=np.asarray(p_dists) if collect_p else None,
+                           t_llm=t_llm)
+
+
+# ======================================================================
+# Facade: slot lifecycle + lockstep rounds over the wire
+# ======================================================================
+class EdgeCloudEngine:
+    """Owns the two actors, the slot lifecycle and the (mirrored) page
+    allocator; moves packed payloads between them.  ``run_round`` is the
+    lockstep schedule (draft ∥ … then verify then feedback — the paper's
+    Algorithm 1); the event-driven pipelined schedule lives in
+    ``repro.serve.events`` and drives the per-slot methods instead."""
+
+    def __init__(self, draft_cfg: ModelConfig, draft_params,
+                 target_cfg: ModelConfig, target_params,
+                 method: MethodConfig, engine: EngineConfig = EngineConfig(),
+                 channel: channel_mod.ChannelConfig =
+                 channel_mod.ChannelConfig(),
+                 seed: int = 0):
+        assert draft_cfg.vocab == target_cfg.vocab, "shared vocabulary"
+        self.dc, self.tc = draft_cfg, target_cfg
+        self.dp, self.tp = draft_params, target_params
+        self.m, self.e, self.ch = method, engine, channel
+        self.seed = seed
+        self.V = draft_cfg.vocab
+        self.fmt = wire_mod.WireFormat(
+            V=self.V, ell=method.ell, L_max=engine.L_max,
+            mode="raw" if method.name == "uncompressed" else "lattice")
+        self.edge = EdgeDraftEngine(draft_cfg, draft_params, method,
+                                    engine, self.fmt, seed)
+        self.cloud = CloudVerifyEngine(target_cfg, target_params, method,
+                                       engine, self.fmt, seed)
+        self._target_stateful = self.cloud.stateful
+        self.paged = False
+        self.alloc: Optional[PageAllocator] = None
+
+    # -- state passthroughs (tests/benchmarks read these) ---------------
+    @property
+    def beta(self):
+        return self.edge.beta
+
+    @property
+    def pos(self):
+        return self.edge.pos
+
+    @property
+    def x_last(self):
+        return self.edge.x_last
+
+    @property
+    def dcache(self):
+        return self.edge.dcache
+
+    @property
+    def tcache(self):
+        return self.cloud.tcache
+
     # ------------------------------------------------------------------
     def prefill(self, prompts):
-        """prompts: (B, S0) int32.  Prepares both caches; the last prompt
+        """prompts: (B, S0) int32.  Prepares both actors; the last prompt
         token becomes x_last (first token the draft loop processes)."""
         B, S0 = prompts.shape
         self.B = B
         self.paged = False
         self.alloc = None
         total = S0 + 4096  # cache capacity headroom
-        _, self.dcache = model_mod.prefill(self.dc, self.dp,
-                                           prompts[:, :-1],
-                                           cache_len=total)
-        _, self.tcache = model_mod.prefill(self.tc, self.tp,
-                                           prompts[:, :-1],
-                                           cache_len=total)
-        self.x_last = prompts[:, -1].astype(jnp.int32)
-        self.pos = jnp.full((B,), S0 - 1, jnp.int32)
-        self.beta = jnp.full((B,), self.m.beta0, jnp.float32)
-        self.keys = jnp.stack([row_key(self.seed, b) for b in range(B)])
+        self.edge.prefill_batch(prompts, total)
+        self.cloud.prefill_batch(prompts, total)
         self.active = np.ones((B,), bool)
         self.out_tokens = [[] for _ in range(B)]
 
@@ -265,15 +727,15 @@ class EdgeCloudEngine:
                    page_size: int = 0, n_pages: Optional[int] = None):
         """Allocate ``n_slots`` empty session slots with per-slot cache
         capacity ``cache_len``.  Slots are filled by admit_slot and freed
-        by release_slot; run_round only advances active slots.
+        by release_slot; rounds only advance committed slots.
 
         ``page_size > 0`` switches eligible attention layers to the PAGED
         layout: one shared pool of ``n_pages`` pages per layer (default:
         slots × pages-per-slot, i.e. the dense footprint) instead of a
-        dense per-slot cache.  Pages are allocated on admit, grown before
-        each round, freed past the kept length on speculative rollback
-        and returned on release — so HBM holds the sum of ACTUAL request
-        lengths and ``n_pages`` (not slot count) caps concurrency."""
+        dense per-slot cache.  The edge and cloud actors mirror ONE
+        allocator (identical admit/grow/shrink sequences on both sides
+        of the link keep their pools in lockstep), so HBM holds the sum
+        of ACTUAL request lengths and ``n_pages`` caps concurrency."""
         assert self.dc.n_encoder_layers == 0 and \
             self.tc.n_encoder_layers == 0, \
             "serving slots do not support encoder-decoder architectures"
@@ -292,21 +754,10 @@ class EdgeCloudEngine:
         else:
             self.alloc = None
         self.cache_len = cache_len
-        self.dcache = model_mod.init_cache(self.dc, n_slots, cache_len,
-                                           paged=spec)
-        self.tcache = model_mod.init_cache(self.tc, n_slots, cache_len,
-                                           paged=spec)
-        self.x_last = jnp.zeros((n_slots,), jnp.int32)
-        self.pos = jnp.zeros((n_slots,), jnp.int32)
-        self.beta = jnp.full((n_slots,), self.m.beta0, jnp.float32)
-        self.keys = jnp.stack([row_key(self.seed, b)
-                               for b in range(n_slots)])
+        self.edge.init_slots(n_slots, cache_len, spec)
+        self.cloud.init_slots(n_slots, cache_len, spec)
         self.active = np.zeros((n_slots,), bool)
         self.out_tokens = [[] for _ in range(n_slots)]
-        self._prefill_d = jax.jit(functools.partial(
-            model_mod.prefill, self.dc, cache_len=cache_len))
-        self._prefill_t = jax.jit(functools.partial(
-            model_mod.prefill, self.tc, cache_len=cache_len))
 
     # -- paged-pool bookkeeping (host side; no-ops in dense mode) -------
     def _device_tables(self):
@@ -314,8 +765,8 @@ class EdgeCloudEngine:
 
     def _push_tables(self):
         pt = self._device_tables()
-        self.dcache = model_mod.set_page_tables(self.dcache, pt)
-        self.tcache = model_mod.set_page_tables(self.tcache, pt)
+        self.edge.set_tables(pt)
+        self.cloud.set_tables(pt)
 
     def pages_needed(self, n_tokens: int) -> int:
         assert self.paged
@@ -341,11 +792,18 @@ class EdgeCloudEngine:
                 return False
         return True
 
+    def ensure_slot_capacity(self, slot: int, n_tokens: int) -> bool:
+        """Per-slot page growth (event-driven serving)."""
+        if not self.paged:
+            return True
+        return self.alloc.ensure(slot, n_tokens)
+
     def admit_slot(self, slot: int, prompt, seed: int):
-        """Prefill ``prompt`` (1-D int32, ≥ 2 tokens) into ``slot``.
-        The request's RNG/β/position state restarts from scratch — other
-        slots' caches and controller state are untouched (their leaves
-        are only re-packed, not re-computed).
+        """Prefill ``prompt`` (1-D int32, ≥ 2 tokens) into ``slot`` on
+        BOTH sides of the link.  The request's RNG/β/position state
+        restarts from scratch — other slots' caches and controller
+        state are untouched (their leaves are only re-packed, not
+        re-computed).
 
         Capacity contract: each round writes draft KV up to pos + L_max,
         and pos advances with every accepted token, so the CALLER must
@@ -367,17 +825,8 @@ class EdgeCloudEngine:
                     f"({self.alloc.free_pages} free); the scheduler "
                     f"should gate admissions on free_pages()")
             pt_row = self._device_tables()[slot]
-        _, dcache1 = self._prefill_d(self.dp, prompt[None, :-1])
-        _, tcache1 = self._prefill_t(self.tp, prompt[None, :-1])
-        self.dcache = model_mod.write_prefill_to_slot(
-            self.dc, self.dcache, dcache1, slot, pt_row, S0 - 1)
-        self.tcache = model_mod.write_prefill_to_slot(
-            self.tc, self.tcache, tcache1, slot, pt_row, S0 - 1)
-        self.x_last = self.x_last.at[slot].set(prompt[-1])
-        self.pos = self.pos.at[slot].set(S0 - 1)
-        self.beta = conformal.admit_rows(
-            self.beta, jnp.arange(self.B) == slot, self.m.beta0)
-        self.keys = self.keys.at[slot].set(row_key(seed, 0))
+        self.edge.admit(slot, prompt, pt_row, seed)
+        self.cloud.admit(slot, prompt, pt_row, seed)
         self.active[slot] = True
         self.out_tokens[slot] = []
 
@@ -390,11 +839,83 @@ class EdgeCloudEngine:
             self.alloc.release(slot)
 
     # ------------------------------------------------------------------
+    # Per-slot round steps (event-driven serving — repro.serve.events)
+    # ------------------------------------------------------------------
+    def draft_slots(self, slots: List[int]) -> Dict[int, PendingRound]:
+        """Draft one round for ``slots`` (each on its own edge device);
+        returns the packed uplink message + emission record per slot."""
+        mask = np.zeros((self.B,), bool)
+        mask[list(slots)] = True
+        if self.paged:
+            pos = np.asarray(self.pos)
+            for s in slots:
+                ok = self.alloc.ensure(s, int(pos[s]) + self.e.L_max + 1)
+                assert ok, "page pool exhausted — the event loop's " \
+                    "worst-case admission gate should prevent this"
+            self._push_tables()
+        batch = self.edge.draft(mask)
+        return {s: self.edge.pending_round(batch, s) for s in slots}
+
+    def draft_speculative_slot(self, slot: int,
+                               rec: PendingRound) -> Optional[SpecDraft]:
+        """Optimistic continuation for ``slot`` while its round is in
+        flight.  Returns None when speculation is pointless or unsafe
+        (window would exceed slot capacity / page pool)."""
+        if self.edge.stateful or self.cloud.stateful:
+            return None
+        n = rec.n_live
+        pos_next = int(np.asarray(self.pos)[slot]) + n + 1
+        if pos_next + self.e.L_max + 1 > self.cache_len:
+            return None
+        if self.paged:
+            if not self.alloc.ensure(slot, pos_next + self.e.L_max + 1):
+                return None
+            self._push_tables()
+        return self.edge.draft_speculative(
+            slot, int(rec.drafts[n]), pos_next, float(rec.betas[n]))
+
+    def commit_speculative(self, spec: SpecDraft):
+        self.edge.commit_speculative(spec)
+
+    def spec_premise_holds(self, spec: SpecDraft, rec: PendingRound,
+                           verdict: wire_mod.VerdictPayload) -> bool:
+        """Was the optimistic continuation drafted from the true state?
+        (β agreement is implied: accept-all backtracks to the same
+        trajectory entry the speculation resumed from.)"""
+        return (verdict.n_accept == rec.n_live
+                and verdict.new_token == spec.in_x)
+
+    def verify_slots(self, packed: Dict[int, bytes]) -> VerifyBatch:
+        """Cloud side of one round for the slots whose payloads arrived:
+        unpack, verify, pack verdicts."""
+        mask = np.zeros((self.B,), bool)
+        mask[list(packed)] = True
+        if self.paged:
+            self._push_tables()
+        payloads = wire_mod.unpack_drafts(self.fmt, packed)
+        return self.cloud.verify(mask, payloads)
+
+    def apply_verdict_slot(self, slot: int,
+                           verdict: wire_mod.VerdictPayload,
+                           rec: PendingRound,
+                           shrink: bool = True) -> List[int]:
+        """Edge side of verdict arrival: emit tokens, resume β, shrink
+        the slot's pages past the kept length.  ``shrink=False`` keeps
+        the grown window — the event loop passes it when a confirmed
+        speculative round's draft KV lives in those pages."""
+        emitted = self.edge.apply_verdict_slot(slot, verdict, rec)
+        self.out_tokens[slot].extend(emitted)
+        if self.paged and shrink:
+            self.alloc.shrink(slot, int(np.asarray(self.pos)[slot]))
+        return emitted
+
+    # ------------------------------------------------------------------
     def run_round(self):
-        """One SD batch over the ACTIVE rows.  Returns a metrics dict
-        (host values).  Inactive slots still flow through the compute
-        (static shapes) but are masked out of budgets, rollback depth,
-        state advancement and every reported statistic."""
+        """One lockstep SD batch over the ACTIVE rows, through the wire.
+        Returns a metrics dict (host values).  Inactive slots still flow
+        through the compute (static shapes) but are masked out of
+        budgets, rollback depth, state advancement and every reported
+        statistic."""
         L = self.e.L_max
         active = np.asarray(self.active, bool)
         n_active = max(int(active.sum()), 1)
@@ -405,56 +926,26 @@ class EdgeCloudEngine:
                     "windows; preempt a request (ServeSession does) "
                     "before run_round")
             self._push_tables()
-        self.keys, kd, kv = _split_rows(self.keys, 3)
 
-        t0 = time.perf_counter()
-        dcache, ys = self._draft_jit(self.dp, self.dcache, self.x_last,
-                                     self.pos, self.beta, kd)
-        jax.block_until_ready(ys["token"])
-        t_slm = time.perf_counter() - t0
-
-        drafts = ys["token"][:L].swapaxes(0, 1)           # (B, L)
-        q_hat = ys["q_hat"][:L].swapaxes(0, 1)            # (B, L, V)
-        bits = np.asarray(ys["bits"][:L]).T               # (B, L)
-        gap_bits = np.asarray(ys["gap_bits"][:L]).T
-        dropped = np.asarray(ys["dropped"][:L + 1]).T     # (B, L+1)
-        Ks = np.asarray(ys["K"][:L]).T
-
-        # budget-driven L^t (paper §4): stop when bits exhausted, >= 1;
-        # inactive slots transmit nothing and accept nothing
-        cum = np.cumsum(bits, axis=1)
-        live_np = cum <= self.e.bit_budget
-        live_np[:, 0] = True
-        live_np &= active[:, None]
-        live = jnp.asarray(live_np)
-
-        tokens_in = jnp.concatenate([self.x_last[:, None], drafts], axis=1)
-        t0 = time.perf_counter()
-        res, p, tcache, traj = self._verify_jit(self.tp, self.tcache,
-                                                tokens_in, self.pos, q_hat,
-                                                live, kv)
-        jax.block_until_ready(res.n_accept)
-        t_llm = time.perf_counter() - t0
-
-        T = res.n_accept                                   # (B,)
-        act_j = jnp.asarray(active)
-        # --- rollbacks (masked: inactive slots keep depth 0) ---
-        T_eff = jnp.where(act_j, T, 0)
-        self.tcache = rollback_cache(self.tc, tcache, traj, T_eff + 1)
-        edge_traj = ({p_: ys["snap"][p_] for p_ in _seq_periods(self.dc)}
-                     if _is_stateful(self.dc) else None)
-        if edge_traj is not None:
-            edge_traj = jax.tree.map(
-                lambda a: jnp.moveaxis(a, 0, 2), edge_traj)  # (N,B,L+1,...)
-        self.dcache = rollback_cache(self.dc, dcache, edge_traj, T_eff + 1)
-        # --- β backtrack (Alg. 1 lines 12-13): keep updates 0..T ---
-        if self.m.name == "csqs":
-            beta_traj = ys["beta"]                         # (L+1, B)
-            back = jnp.take_along_axis(beta_traj, T[None, :], axis=0)[0]
-            self.beta = jnp.where(act_j, back, self.beta)
-        # --- bookkeeping (active rows only) ---
-        self.pos = self.pos + jnp.where(act_j, T + 1, 0)
-        self.x_last = jnp.where(act_j, res.new_token, self.x_last)
+        db = self.edge.draft(active)
+        # --- the uplink: packed bytes cross, the cloud decodes ---------
+        payloads = wire_mod.unpack_drafts(self.fmt, db.packed)
+        wire_bits_row = np.zeros((self.B,), np.float64)
+        for slot, data in db.packed.items():
+            wire_bits_row[slot] = wire_mod.packed_bits(data)
+        vb = self.cloud.verify(active, payloads,
+                               collect_p=self.e.collect_theory)
+        # --- the downlink: packed verdicts cross back ------------------
+        verdict_packed = {s: self.fmt.pack_verdict(v)
+                          for s, v in vb.verdicts.items()}
+        verdict_bits_row = np.zeros((self.B,), np.float64)
+        for slot, data in verdict_packed.items():
+            verdict_bits_row[slot] = wire_mod.packed_bits(data)
+        verdicts = {s: self.fmt.unpack_verdict(b)
+                    for s, b in verdict_packed.items()}
+        emitted = self.edge.apply_verdicts_batch(active, verdicts, db)
+        for b in range(self.B):
+            self.out_tokens[b].extend(emitted[b])
         if self.paged:
             # speculative rollback, memory side: pages covering only the
             # rejected draft tail (positions >= new pos) go back to the
@@ -463,38 +954,38 @@ class EdgeCloudEngine:
             for slot in range(self.B):
                 if active[slot]:
                     self.alloc.shrink(slot, int(pos_np[slot]))
-        T_np = np.asarray(T)
-        nt = np.asarray(res.new_token)
-        dr = np.asarray(drafts)
-        emitted = [[] for _ in range(self.B)]
-        for b in range(self.B):
-            if not active[b]:
-                continue
-            emitted[b] = dr[b, :T_np[b]].tolist() + [int(nt[b])]
-            self.out_tokens[b].extend(emitted[b])
 
-        bits_row = (bits * live_np).sum(1)                 # (B,)
-        gap_bits_row = (gap_bits * live_np).sum(1)
+        T_np = vb.T
+        live_np = db.live
+        bits_row = (db.bits * live_np).sum(1)              # (B,)
+        gap_bits_row = (db.gap_bits * live_np).sum(1)
         live_bits = float(bits_row.sum() / n_active)
         live_gap_bits = float(gap_bits_row.sum() / n_active)
-        t_up = channel_mod.uplink_time(self.ch, live_bits)
+        wire_bits = float(wire_bits_row.sum() / n_active)
+        t_up = channel_mod.uplink_time(self.ch, wire_bits)
         t_down = channel_mod.downlink_time(
-            self.ch, channel_mod.feedback_bits(L, self.V))
+            self.ch, float(verdict_bits_row.max()) if active.any()
+            else channel_mod.feedback_bits(L, self.V))
         metrics = {
             "n_accept": np.where(active, T_np, 0),
-            "rejected": np.asarray(res.rejected) & active,
+            "rejected": vb.rejected & active,
             "L_live": live_np.sum(1),
             "bits": live_bits,
             "gap_bits": live_gap_bits,
             "bits_row": bits_row,
             "gap_bits_row": gap_bits_row,
+            "wire_bits": wire_bits,
+            "wire_bits_row": wire_bits_row,
+            "verdict_bits_row": verdict_bits_row,
             "active": active.copy(),
             "emitted": emitted,
-            "K_mean": float((Ks * live_np).sum() / max(live_np.sum(), 1)),
-            "dropped_mean": float(dropped[active, :L].mean())
+            "K_mean": float((db.Ks * live_np).sum()
+                            / max(live_np.sum(), 1)),
+            "dropped_mean": float(db.dropped[active, :L].mean())
             if active.any() else 0.0,
-            "t_slm": t_slm, "t_up": t_up, "t_llm": t_llm, "t_down": t_down,
-            "t_total": t_slm + t_up + t_llm + t_down,
+            "t_slm": db.t_slm, "t_up": t_up, "t_llm": vb.t_llm,
+            "t_down": t_down,
+            "t_total": db.t_slm + t_up + vb.t_llm + t_down,
             "tokens_out": np.where(active, 1 + T_np, 0),
         }
         if self.paged:
@@ -502,11 +993,12 @@ class EdgeCloudEngine:
             metrics["free_pages"] = self.alloc.free_pages
             metrics["peak_pages_in_use"] = self.alloc.peak_in_use
         if self.e.collect_theory:
-            metrics["q"] = np.asarray(ys["q"][:L].swapaxes(0, 1))
-            metrics["q_hat"] = np.asarray(q_hat)
-            metrics["p"] = np.asarray(p)
-            metrics["dropped_seq"] = dropped
-            metrics["K_seq"] = Ks
+            metrics["q"] = np.asarray(db.ys["q"][:L].swapaxes(0, 1))
+            metrics["q_hat"] = np.asarray(
+                db.ys["q_hat"][:L].swapaxes(0, 1))
+            metrics["p"] = vb.p
+            metrics["dropped_seq"] = db.dropped
+            metrics["K_seq"] = db.Ks
         return metrics
 
     # ------------------------------------------------------------------
@@ -529,6 +1021,8 @@ def summarize(rounds):
         "bits_per_batch": float(np.mean([r["bits"] for r in rounds])),
         "gap_bits_per_batch": float(np.mean([r["gap_bits"]
                                              for r in rounds])),
+        "wire_bits_per_batch": float(np.mean([r.get("wire_bits", 0.0)
+                                              for r in rounds])),
         "accept_rate": float(np.mean(
             [r["n_accept"].mean() / max(r["L_live"].mean(), 1)
              for r in rounds])),

@@ -12,10 +12,14 @@ compression method over the modeled uplink; prints the paper's metrics
 Trace mode (--trace): replays a seeded Poisson arrival trace through the
 continuous-batching scheduler (repro.serve) with the shared contended
 uplink, and reports throughput, per-request latency percentiles and the
-admission rejection rate.
+admission rejection rate.  ``--pipeline pipelined`` switches the barrier
+rounds for the event-driven loop (overlapped draft/uplink/verify/
+downlink plus optimistic draft-ahead) — same token streams, lower
+latency.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        --method csqs --trace --rate 4 --n-requests 16 --max-batch 4
+        --method csqs --trace --rate 4 --n-requests 16 --max-batch 4 \
+        --pipeline pipelined
 """
 from __future__ import annotations
 
@@ -81,6 +85,15 @@ def main():
                     help="trace mode: waiting-room size before rejecting")
     ap.add_argument("--policy", default="continuous",
                     choices=["continuous", "static"])
+    ap.add_argument("--pipeline", default="lockstep",
+                    choices=["lockstep", "pipelined"],
+                    help="trace mode: lockstep barrier rounds, or the "
+                         "event-driven loop overlapping edge drafting, "
+                         "uplink, cloud verify and downlink (same token "
+                         "streams, lower latency)")
+    ap.add_argument("--no-speculate", action="store_true",
+                    help="pipelined: disable the edge's optimistic "
+                         "draft-ahead of round t+1")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-slot cache capacity (0 = auto)")
     ap.add_argument("--page-size", type=int, default=0,
@@ -120,12 +133,15 @@ def main():
             max_batch=args.max_batch, queue_cap=args.queue_cap,
             policy=args.policy, cache_len=cache_len,
             page_size=args.page_size,
-            n_pages=args.n_pages or None))
+            n_pages=args.n_pages or None,
+            pipeline=args.pipeline,
+            speculate=not args.no_speculate))
         rep = sess.run_trace(trace)
         kv = (f"paged({args.page_size}-tok pages)" if args.page_size
               else "dense")
         print(f"[serve --trace] {tc.name} <- {dc.name}  "
               f"method={args.method} policy={args.policy} "
+              f"pipeline={args.pipeline} "
               f"rate={args.rate}/s slots={args.max_batch} kv={kv}")
         for k, v in rep.summary().items():
             if isinstance(v, float):

@@ -3,16 +3,18 @@
     Request / RequestState     — request lifecycle (serve.request)
     Scheduler, SchedulerConfig — admission/eviction, slot packing
     ServeSession, ServeConfig  — serving loop, contended-uplink clock
+    EventDrivenLoop            — pipelined schedule (serve.events)
     ServeReport                — throughput / latency-percentile report
     TraceConfig, poisson_trace — seeded Poisson arrival workloads
 """
+from repro.serve.events import EventDrivenLoop
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Scheduler, SchedulerConfig
 from repro.serve.session import ServeConfig, ServeReport, ServeSession
 from repro.serve.trace import TraceConfig, poisson_trace
 
 __all__ = [
-    "Request", "RequestState", "Scheduler", "SchedulerConfig",
-    "ServeConfig", "ServeReport", "ServeSession", "TraceConfig",
-    "poisson_trace",
+    "EventDrivenLoop", "Request", "RequestState", "Scheduler",
+    "SchedulerConfig", "ServeConfig", "ServeReport", "ServeSession",
+    "TraceConfig", "poisson_trace",
 ]

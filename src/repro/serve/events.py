@@ -1,0 +1,266 @@
+"""Event-driven pipelined serving loop (PipeSD-style overlap).
+
+The lockstep loop (``ServeSession._step_round``) is a global barrier:
+every active request drafts, then every payload serialises on the shared
+uplink, then ONE batched verify runs, then the feedback broadcast — the
+cloud idles while the edges draft and the edges idle while the cloud
+verifies.  This module replaces the barrier with a discrete-event
+simulation over a heap of
+
+    arrival → edge-done → uplink-arrive → verify-done → downlink-arrive
+
+events, so the three resources overlap across requests:
+
+  * each request drafts on its OWN edge device (drafts run in parallel
+    across requests, t_slm each);
+  * payloads serialise FIFO on the ONE shared uplink the moment their
+    draft finishes (``core.channel.SharedUplink`` — head-of-line waits
+    are charged per request, exactly as in lockstep);
+  * the cloud is a single server that batches every payload that has
+    arrived by the time it goes idle into one verify call (t_llm) —
+    masked-batch equivalence makes the verdicts independent of how the
+    requests happen to be grouped;
+  * each verdict returns on the downlink independently
+    (``wire.VerdictPayload`` packed bits).
+
+Optimistic continuation: after a payload is handed to the uplink the
+edge device is idle, so it speculatively drafts round t+1 under the
+premise that every live draft is accepted and the bonus token equals
+its own continuation sample (``PendingRound.drafts[n_live]``).  When the
+verdict confirms the premise the next payload is ready the moment the
+speculative draft finishes; when it refutes it, the speculative work is
+aborted (modeled as free — a cancelled kernel) and the corrective draft
+starts at verdict arrival, exactly where lockstep would start it — so
+mis-speculation never makes the pipeline slower than lockstep, and the
+PRNG discipline (the corrective draft re-consumes the same per-round
+key the speculation used) keeps token streams BIT-IDENTICAL to lockstep
+either way.
+
+Pipelined mode requires positional (attention-KV) draft/target caches —
+sequential-state models (SSM/hybrid) need whole-batch snapshot rollback
+and must serve lockstep.  Paged serving is supported with a WORST-CASE
+admission gate (pages for prompt + max_new + draft window reserved up
+front), so mid-flight preemption — which would tangle with in-flight
+verdicts — never triggers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional
+
+from repro.core import channel as channel_mod
+from repro.core.engine import PendingRound, SpecDraft
+from repro.serve.request import Request
+
+ARRIVAL = "arrival"
+EDGE_DONE = "edge_done"
+UPLINK_ARRIVE = "uplink_arrive"
+VERIFY_DONE = "verify_done"
+DOWNLINK_ARRIVE = "downlink_arrive"
+
+
+@dataclasses.dataclass
+class _SlotCtx:
+    """Per-slot in-flight state between events."""
+    req: Request
+    rec: Optional[PendingRound] = None    # round awaiting verdict
+    spec: Optional[SpecDraft] = None      # optimistic round t+1
+    spec_ready_s: float = 0.0
+
+
+class EventDrivenLoop:
+    """Drives a ServeSession's engine/scheduler/uplink through the
+    event heap.  Token streams are bit-identical to the lockstep loop;
+    only the CLOCK differs (overlap instead of barriers)."""
+
+    def __init__(self, sess):
+        self.sess = sess
+        self.eng = sess.engine
+        self.sched = sess.sched
+        self.uplink = sess.uplink
+        self.ch = self.eng.ch
+        self.cfg = sess.cfg
+        assert not (self.eng.edge.stateful or self.eng.cloud.stateful), \
+            "pipelined serving requires attention-only draft/target " \
+            "models (sequential-state rollback is lockstep-only)"
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = itertools.count()
+        self.cloud_busy_until = 0.0
+        self.cloud_queue: List[int] = []
+        self.slots: Dict[int, _SlotCtx] = {}
+        self.reserved_pages = 0
+        self.speculate = cfg_speculate(sess.cfg)
+        self.n_drafts = 0
+        self.n_verify_batches = 0
+        self.n_spec_hits = 0
+        self.n_spec_misses = 0
+
+    # -- clock helpers --------------------------------------------------
+    def _dur_slm(self, measured: float) -> float:
+        return self.cfg.t_slm_s if self.cfg.t_slm_s is not None \
+            else measured
+
+    def _dur_llm(self, measured: float) -> float:
+        return self.cfg.t_llm_s if self.cfg.t_llm_s is not None \
+            else measured
+
+    def _push(self, t: float, kind: str, data=None):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    # -- main loop ------------------------------------------------------
+    def run(self, trace: List[Request]) -> int:
+        """Replay ``trace`` to completion; returns total requests."""
+        pending = sorted(trace, key=lambda r: r.t_arrival)
+        for req in pending:
+            self._push(req.t_arrival, ARRIVAL, req)
+        handlers = {
+            ARRIVAL: self._on_arrival,
+            EDGE_DONE: self._on_edge_done,
+            UPLINK_ARRIVE: self._on_uplink_arrive,
+            VERIFY_DONE: self._on_verify_done,
+            DOWNLINK_ARRIVE: self._on_downlink_arrive,
+        }
+        budget = self.cfg.max_rounds * max(self.cfg.max_batch, 1)
+        while self._heap:
+            t, _, kind, data = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            handlers[kind](data)
+            self.sched.check_invariants()
+            if self.n_drafts > budget:
+                raise RuntimeError("pipelined loop exceeded its draft "
+                                   "budget — request(s) not terminating?")
+        assert self.sched.n_active == 0 and not self.sched.waiting
+        return len(trace)
+
+    # -- admission ------------------------------------------------------
+    def _worst_case_gate(self):
+        """Paged admission gate, WORST CASE: reserve pages for prompt +
+        max_new_tokens + one draft window, so mid-flight growth (incl.
+        the speculative window, which is strictly smaller) can never
+        exhaust the pool — pipelined serving has no preemption path."""
+        if not self.eng.paged:
+            return None
+
+        def gate(req: Request) -> bool:
+            need = self.eng.pages_needed(self.sess._cache_need(req))
+            if self.reserved_pages + need > self.eng.alloc.n_pages:
+                return False
+            # reserve AT THE GATE: several admissions in one scheduling
+            # tick must each see the previous one's reservation
+            self.reserved_pages += need
+            return True
+
+        return gate
+
+    def _on_arrival(self, req: Request):
+        if self.sess._cache_need(req) > self.sess.cache_len:
+            self.sched.reject(req)
+            return
+        self.sched.submit(req, self.now)
+        self._tick_admissions()
+
+    def _tick_admissions(self):
+        for slot, req in self.sched.schedule(self.now,
+                                             can_admit=self._worst_case_gate()):
+            assert self.sess._cache_need(req) <= self.sess.cache_len
+            self.eng.admit_slot(slot, req.prompt, req.seed)
+            self.slots[slot] = _SlotCtx(req=req)
+            self.sess.peak_active = max(self.sess.peak_active,
+                                        self.sched.n_active)
+            self._start_draft(slot)
+
+    # -- edge -----------------------------------------------------------
+    def _start_draft(self, slot: int):
+        rec = self.eng.draft_slots([slot])[slot]
+        self.n_drafts += 1
+        self._push(self.now + self._dur_slm(rec.t_slm), EDGE_DONE,
+                   (slot, rec))
+
+    def _on_edge_done(self, data):
+        slot, rec = data
+        ctx = self.slots[slot]
+        ctx.rec = rec
+        tx = self.uplink.transmit(self.now, rec.wire_bits)
+        ctx.req.uplink_wait_s += tx.wait_s
+        self._push(tx.arrive_s, UPLINK_ARRIVE, slot)
+        # the edge device is idle until the verdict returns: draft ahead
+        if self.speculate and not self._would_finish(ctx.req, rec):
+            spec = self.eng.draft_speculative_slot(slot, rec)
+            if spec is not None:
+                self.n_drafts += 1
+                ctx.spec = spec
+                ctx.spec_ready_s = self.now + self._dur_slm(
+                    spec.round.t_slm)
+
+    def _would_finish(self, req: Request, rec: PendingRound) -> bool:
+        """Under the optimistic premise the request emits n_live+1
+        tokens — if that completes it, round t+1 never runs."""
+        return req.n_tokens + rec.n_live + 1 >= req.max_new_tokens
+
+    # -- uplink / cloud -------------------------------------------------
+    def _on_uplink_arrive(self, slot: int):
+        self.cloud_queue.append(slot)
+        if self.now >= self.cloud_busy_until:
+            self._start_verify()
+
+    def _start_verify(self):
+        batch, self.cloud_queue = self.cloud_queue, []
+        packed = {s: self.slots[s].rec.packed for s in batch}
+        vb = self.eng.verify_slots(packed)
+        self.n_verify_batches += 1
+        done = self.now + self._dur_llm(vb.t_llm)
+        self.cloud_busy_until = done
+        self._push(done, VERIFY_DONE, (batch, vb))
+
+    def _on_verify_done(self, data):
+        batch, vb = data
+        fmt = self.eng.fmt
+        for slot in batch:
+            data_v = fmt.pack_verdict(vb.verdicts[slot])
+            t_down = channel_mod.downlink_time(self.ch,
+                                               len(data_v) * 8)
+            self._push(self.now + t_down, DOWNLINK_ARRIVE,
+                       (slot, fmt.unpack_verdict(data_v)))
+        if self.cloud_queue:                 # work queued while busy
+            self._start_verify()
+
+    # -- verdict application --------------------------------------------
+    def _on_downlink_arrive(self, data):
+        slot, verdict = data
+        ctx = self.slots[slot]
+        rec, ctx.rec = ctx.rec, None
+        spec, ctx.spec = ctx.spec, None
+        req = ctx.req
+        hit = spec is not None and \
+            self.eng.spec_premise_holds(spec, rec, verdict)
+        # on a hit the speculative round's draft window must survive the
+        # post-verdict page shrink; on a miss it is reclaimed
+        emitted = self.eng.apply_verdict_slot(slot, verdict, rec,
+                                              shrink=not hit)
+        req.n_rounds += 1
+        finished = req.add_tokens(emitted, self.now)
+        if finished:
+            self.sched.complete(req, self.now)
+            self.eng.release_slot(slot)
+            if self.eng.paged:
+                self.reserved_pages -= self.eng.pages_needed(
+                    self.sess._cache_need(req))
+            del self.slots[slot]
+            self._tick_admissions()
+            return
+        if hit:
+            self.n_spec_hits += 1
+            self.eng.commit_speculative(spec)
+            self._push(max(self.now, ctx.spec_ready_s), EDGE_DONE,
+                       (slot, spec.round))
+        else:
+            if spec is not None:
+                self.n_spec_misses += 1   # abort is free (cancelled work)
+            self._start_draft(slot)
+
+
+def cfg_speculate(cfg) -> bool:
+    return getattr(cfg, "speculate", True)

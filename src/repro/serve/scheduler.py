@@ -118,6 +118,14 @@ class Scheduler:
             admissions.append((slot, req))
         return admissions
 
+    def pick_preemption_victim(self) -> Request:
+        """LIFO victim selection for page-pool exhaustion: the most
+        recently admitted active request has the least sunk work (and
+        its deterministic RNG re-emits the same tokens on the re-run)."""
+        active = self.active_requests
+        assert active, "no active request to preempt"
+        return max(active, key=lambda r: (r.t_admit, r.slot))
+
     def preempt(self, req: Request) -> int:
         """Page-pool exhaustion eviction: the request loses its slot and
         its generated-so-far tokens (deterministic per-request RNG makes

@@ -1,6 +1,23 @@
 """Continuous-batching serving loop over the slot-level engine API.
 
-``ServeSession`` owns the virtual serving clock.  Per iteration:
+Two schedules behind one config (``ServeConfig.pipeline``):
+
+  lockstep   — the global-barrier loop in this module (below);
+  pipelined  — the event-driven loop in ``serve.events``: edge
+               drafting, uplink serialisation, cloud verification and
+               downlink feedback overlap across requests, and each edge
+               speculatively drafts its next round while its verdict is
+               in flight.  Token streams are bit-identical to lockstep;
+               only the clock (and therefore every latency metric)
+               differs.
+
+In BOTH schedules the uplink is charged with the PACKED DraftPayload
+bytes (``core.wire``) — ``len(pack(p)) * 8`` — and the downlink with the
+packed VerdictPayload, not with the analytic formulas of ``core.bits``
+(those remain the edge's budget estimate for choosing L^t).
+
+``ServeSession`` owns the virtual serving clock.  Per lockstep
+iteration:
 
   1. release arrivals whose t_arrival <= now into the scheduler
      (admission control may reject);
@@ -49,6 +66,12 @@ class ServeConfig:
     policy: str = "continuous"      # continuous | static
     cache_len: int = 256            # per-REQUEST KV capacity ceiling
     max_rounds: int = 100_000       # safety valve for the replay loop
+    # Serving schedule: "lockstep" is the global-barrier loop below
+    # (draft ∥, transmit, one batched verify, broadcast); "pipelined"
+    # is the event-driven overlap of serve.events — same token streams
+    # bit for bit, different clock.
+    pipeline: str = "lockstep"      # lockstep | pipelined
+    speculate: bool = True          # pipelined: optimistic continuation
     # Paged KV pool: page_size > 0 switches eligible attention layers to
     # a shared page pool; admission is then by free pages.  n_pages None
     # defaults to max_batch * ceil(cache_len / page_size) (the dense
@@ -90,6 +113,11 @@ class ServeReport:
     page_size: int = 0
     n_pages: int = 0
     peak_pages_in_use: int = 0
+    # schedule + wire metrics (this PR's pipelined serving)
+    pipeline: str = "lockstep"
+    latency_mean_s: float = float("nan")
+    n_spec_hits: int = 0
+    n_spec_misses: int = 0
     requests: List[Request] = dataclasses.field(default_factory=list,
                                                 repr=False)
 
@@ -107,8 +135,11 @@ def _percentile(xs, q):
 
 class ServeSession:
     def __init__(self, engine: EdgeCloudEngine, cfg: ServeConfig):
+        assert cfg.pipeline in ("lockstep", "pipelined"), cfg.pipeline
         self.engine = engine
         self.cfg = cfg
+        self.n_spec_hits = 0
+        self.n_spec_misses = 0
         self.sched = Scheduler(SchedulerConfig(
             max_batch=cfg.max_batch, queue_cap=cfg.queue_cap,
             policy=cfg.policy))
@@ -187,12 +218,10 @@ class ServeSession:
         active request's window is <= cache_len <= pool size."""
         eng, sched = self.engine, self.sched
         while not eng.ensure_round_capacity():
-            active = sched.active_requests
-            assert len(active) > 1, \
+            assert sched.n_active > 1, \
                 "single request exceeded the page pool — arrival " \
                 "admission should have rejected it"
-            victim = max(active, key=lambda r: (r.t_admit, r.slot))
-            slot = sched.preempt(victim)
+            slot = sched.preempt(sched.pick_preemption_victim())
             eng.release_slot(slot)
 
     def _step_round(self):
@@ -213,15 +242,20 @@ class ServeSession:
         edge_done = self.now + t_slm
         arrive = edge_done
         for req in sched.active_requests:
-            # bits_row is the paper's complete per-round payload;
-            # gap_bits_row is an ALTERNATIVE subset encoding of the same
-            # payload (bits.py) — transmit one, never the sum
-            payload = float(m["bits_row"][req.slot])
+            # wire_bits_row is len(pack(DraftPayload)) * 8 — the ACTUAL
+            # bytes the edge serialises, not the analytic budget the
+            # edge used to choose L^t (bits_row, kept for reporting)
+            payload = float(m["wire_bits_row"][req.slot])
             tx = self.uplink.transmit(edge_done, payload)
             req.uplink_wait_s += tx.wait_s
             arrive = max(arrive, tx.arrive_s)
+        # downlink feedback: the packed VerdictPayload broadcast (the
+        # slowest verdict gates the lockstep barrier)
+        vbits = [float(m["verdict_bits_row"][req.slot])
+                 for req in sched.active_requests]
         t_down = channel_mod.downlink_time(
-            eng.ch, channel_mod.feedback_bits(eng.e.L_max, eng.V))
+            eng.ch, max(vbits) if vbits
+            else channel_mod.feedback_bits(eng.e.L_max, eng.V))
         self.now = arrive + t_llm + t_down
 
         # --- token delivery + completion ---
@@ -236,7 +270,19 @@ class ServeSession:
 
     # ------------------------------------------------------------------
     def run_trace(self, trace: List[Request]) -> ServeReport:
-        """Replay an arrival trace to completion and report."""
+        """Replay an arrival trace to completion and report.  Dispatches
+        on the configured schedule: the global-barrier lockstep loop
+        below, or the event-driven pipelined loop (serve.events) — both
+        emit bit-identical per-request token streams."""
+        if self.cfg.pipeline == "pipelined":
+            from repro.serve.events import EventDrivenLoop
+            loop = EventDrivenLoop(self)
+            n_total = loop.run(trace)
+            self.now = loop.now
+            self.n_rounds = loop.n_verify_batches
+            self.n_spec_hits = loop.n_spec_hits
+            self.n_spec_misses = loop.n_spec_misses
+            return self._report(n_total)
         pending = sorted(trace, key=lambda r: r.t_arrival)
         n_total = len(pending)
         while True:
@@ -289,5 +335,9 @@ class ServeSession:
             n_pages=self.engine.alloc.n_pages if self.paged else 0,
             peak_pages_in_use=self.engine.alloc.peak_in_use
             if self.paged else 0,
+            pipeline=self.cfg.pipeline,
+            latency_mean_s=float(np.mean(lats)) if lats else float("nan"),
+            n_spec_hits=self.n_spec_hits,
+            n_spec_misses=self.n_spec_misses,
             requests=self.sched.finished + self.sched.rejected,
         )

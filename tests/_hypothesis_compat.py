@@ -1,39 +1,118 @@
 """Optional-hypothesis shim for the property-based tests.
 
 ``hypothesis`` is a declared test dependency (``pip install -e .[test]``)
-and CI always has it, but the suite must still COLLECT and run its
-example-based tests on minimal environments.  Importing ``given`` /
-``settings`` / ``st`` from here instead of from hypothesis makes the
-property-based cases skip (not crash collection) when the package is
-absent.
+and CI always has it.  On minimal environments (no hypothesis) the
+property suites used to SKIP; now they still RUN, through a small
+deterministic fallback: ``given`` draws seeded pseudo-random examples
+from a miniature strategy implementation covering the API surface these
+tests use (integers / floats / booleans / sampled_from / tuples /
+lists).  The fallback is no replacement for hypothesis — no shrinking,
+no coverage-guided generation, capped example counts — but it keeps the
+allocator-invariant and theorem-bound properties exercised everywhere.
+
+Import ``given`` / ``settings`` / ``st`` from here instead of from
+hypothesis; real hypothesis wins whenever it is installed.
 """
-import pytest
+import random
+import zlib
 
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:        # degrade: skip property-based cases
+except ModuleNotFoundError:        # degrade: deterministic mini-runner
     HAVE_HYPOTHESIS = False
 
-    def settings(*args, **kwargs):
+    # Cap fallback example counts: the point is coverage on minimal
+    # installs, not matching hypothesis' search budget.
+    _MAX_EXAMPLES_CAP = 50
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _edge_biased_int(rng, lo, hi):
+        # hit the endpoints often — that is where off-by-ones live
+        r = rng.random()
+        if r < 0.1:
+            return lo
+        if r < 0.2:
+            return hi
+        return rng.randint(lo, hi)
+
+    class _Strategies:
+        """Mini stand-in for hypothesis.strategies."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 31):
+            return _Strategy(lambda rng:
+                             _edge_biased_int(rng, min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            def draw(rng):
+                r = rng.random()
+                if r < 0.1:
+                    return float(min_value)
+                if r < 0.2:
+                    return float(max_value)
+                return rng.uniform(min_value, max_value)
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng:
+                             tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = _edge_biased_int(rng, min_size, max_size)
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples=100, **_kw):
         def deco(fn):
+            fn._shim_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
             return fn
         return deco
 
-    def given(*args, **kwargs):
+    def given(*strats, **kwstrats):
         def deco(fn):
-            return pytest.mark.skip(
-                reason="hypothesis not installed — property-based case; "
-                       "pip install -e .[test]")(fn)
+            # NOT functools.wraps: pytest must not see the property
+            # arguments as fixtures (real hypothesis also zero-args the
+            # wrapper), so only name/doc carry over.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", 25)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for i in range(n):
+                    ex_args = tuple(s.example(rng) for s in strats)
+                    ex_kw = {k: s.example(rng)
+                             for k, s in kwstrats.items()}
+                    try:
+                        fn(*args, *ex_args, **kwargs, **ex_kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"fallback property runner: example {i} "
+                            f"failed with args={ex_args} kwargs={ex_kw}"
+                        ) from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            # @settings may be applied ABOVE @given: let it reach through
+            wrapper._shim_max_examples = getattr(fn, "_shim_max_examples",
+                                                 25)
+            return wrapper
         return deco
-
-    class _Strategies:
-        """Stands in for hypothesis.strategies; every strategy call
-        returns None (the test body never runs when skipped)."""
-
-        def __getattr__(self, name):
-            def strategy(*args, **kwargs):
-                return None
-            return strategy
-
-    st = _Strategies()

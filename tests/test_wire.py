@@ -1,0 +1,166 @@
+"""Wire-protocol tests: bit-exact pack/unpack round trips, packed sizes
+vs the core.bits analytic wire budget, and the documented overhead over
+the paper's entropy-optimal formulas."""
+import numpy as np
+
+from repro.core import bits
+from repro.core.wire import (BitReader, BitWriter, DraftPayload,
+                             VerdictPayload, WireFormat,
+                             build_draft_payload, draft_arrays)
+from repro.core.slq import lattice_quantize
+
+from _hypothesis_compat import given, settings, st
+
+
+def _random_payload(rng, fmt: WireFormat):
+    n = int(rng.integers(1, fmt.L_max + 1))
+    tokens, sups, cnts = [], [], []
+    for _ in range(n):
+        K = int(rng.integers(1, min(fmt.V, fmt.ell) + 1))
+        sup = np.sort(rng.choice(fmt.V, K, replace=False))
+        # counts >= 1 summing to ell (a valid lattice point)
+        cut = np.sort(rng.choice(fmt.ell - 1, K - 1, replace=False)) + 1
+        cnt = np.diff(np.concatenate([[0], cut, [fmt.ell]]))
+        assert cnt.sum() == fmt.ell and (cnt >= 1).all()
+        tokens.append(int(rng.integers(0, fmt.V)))
+        sups.append(tuple(int(i) for i in sup))
+        cnts.append(tuple(int(c) for c in cnt))
+    betas = tuple(np.float32(rng.normal(0, 0.3)) for _ in range(n + 1))
+    return DraftPayload(tokens=tuple(tokens), supports=tuple(sups),
+                        counts=tuple(cnts),
+                        betas=tuple(float(b) for b in betas))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 700),
+       st.integers(2, 300), st.integers(1, 8))
+def test_draft_roundtrip_is_exact(seed, V, ell, L_max):
+    rng = np.random.default_rng(seed)
+    fmt = WireFormat(V=V, ell=ell, L_max=L_max)
+    p = _random_payload(rng, fmt)
+    assert fmt.unpack_draft(fmt.pack_draft(p)) == p
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 700), st.integers(1, 8))
+def test_verdict_roundtrip_is_exact(seed, V, L_max):
+    rng = np.random.default_rng(seed)
+    fmt = WireFormat(V=V, ell=100, L_max=L_max)
+    v = VerdictPayload(n_accept=int(rng.integers(0, L_max + 1)),
+                       new_token=int(rng.integers(0, V)),
+                       beta_next=float(np.float32(rng.normal(0, 0.3))))
+    assert fmt.unpack_verdict(fmt.pack_verdict(v)) == v
+    nbits = len(fmt.pack_verdict(v)) * 8
+    analytic = bits.wire_verdict_bits(V, L_max)
+    assert analytic <= nbits <= analytic + 7    # byte padding only
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_packed_bits_match_analytic_budget(seed):
+    """len(pack(p)) * 8 must equal the core.bits wire budget exactly
+    (modulo the final byte padding)."""
+    rng = np.random.default_rng(seed)
+    fmt = WireFormat(V=257, ell=100, L_max=6)
+    p = _random_payload(rng, fmt)
+    nbits = len(fmt.pack_draft(p)) * 8
+    analytic = (bits.wire_header_bits(fmt.L_max)
+                + sum(bits.wire_token_bits(fmt.V, len(s), fmt.ell)
+                      for s in p.supports)
+                + bits.wire_beta_bits(p.n_drafts))
+    assert analytic <= nbits <= analytic + 7, (nbits, analytic)
+
+
+def test_wire_overhead_over_entropy_budget_is_bounded():
+    """The fixed-width wire format is a real code, so it can only be
+    LONGER than the paper's entropy budgets — and for the subset/count
+    fields the overhead is at most the gap between ⌈log2⌉-per-symbol
+    and the joint combinatorial code."""
+    import math
+    V, ell = 50257, 100
+    for K in (1, 4, 16, 64, 256):
+        wirebits = bits.wire_token_bits(V, K, ell)
+        entropy = float(bits.token_bits(V, float(K), ell, adaptive=True))
+        assert wirebits >= entropy - 1e-6
+        # documented bound: the sorted index list loses ~log2(K!) to the
+        # combinatorial subset code, the fixed-width counts lose up to
+        # K⌈log2(ℓ+1)⌉ to the composition code, plus per-field ceilings
+        log2_kfact = (math.lgamma(K + 1)) / math.log(2.0)
+        slack = log2_kfact + K * bits._width(ell) + 2 * K + 64
+        assert wirebits <= entropy + slack, (K, wirebits, entropy)
+
+
+def test_bitio_roundtrip_mixed_widths():
+    w = BitWriter()
+    w.write([5], 3)
+    w.write([1023, 0, 511], 10)
+    w.write_f32([1.5, -0.0, 3e-8])
+    data = w.getvalue()
+    assert len(data) == -(-w.n_bits // 8)
+    r = BitReader(data)
+    assert r.read(3)[0] == 5
+    assert r.read(10, 3).tolist() == [1023, 0, 511]
+    f = r.read_f32(3)
+    np.testing.assert_array_equal(
+        f, np.asarray([1.5, -0.0, 3e-8], np.float32))
+    assert np.signbit(f[1])                  # -0.0 survives bit-exactly
+
+
+def test_build_and_reconstruct_qhat_bit_exact():
+    """Edge builds the payload from q̂ = b/ℓ; the cloud's reconstruction
+    must be the bit-identical float32 array (the SD acceptance ratio is
+    computed against the transmitted distribution)."""
+    rng = np.random.default_rng(0)
+    V, ell, L = 97, 50, 4
+    fmt = WireFormat(V=V, ell=ell, L_max=L)
+    q = rng.dirichlet(np.full(V, 0.2), size=L).astype(np.float32)
+    mask = q > 1e-2
+    mask[:, 0] = True
+    qm = np.where(mask, q, 0.0)
+    qm /= qm.sum(-1, keepdims=True)
+    import jax.numpy as jnp
+    q_hat = np.asarray(lattice_quantize(jnp.asarray(qm), ell,
+                                        jnp.asarray(mask))[0])
+    tokens = rng.integers(0, V, L + 1)
+    betas = rng.normal(0, 0.1, L + 1).astype(np.float32)
+    p = build_draft_payload(fmt, tokens, q_hat, betas, n_live=3)
+    p2 = fmt.unpack_draft(fmt.pack_draft(p))
+    toks, q_rec, live = draft_arrays(fmt, p2)
+    assert live.tolist() == [True, True, True, False]
+    assert toks[:3].tolist() == tokens[:3].tolist()
+    np.testing.assert_array_equal(q_rec[:3], q_hat[:3])
+    assert (q_rec[3] == 0).all()
+    # β trajectory survives as exact f32 bit patterns
+    assert np.asarray(p2.betas, np.float32).tobytes() == \
+        betas[:4].tobytes()
+
+
+def test_raw_mode_roundtrip():
+    fmt = WireFormat(V=33, ell=100, L_max=2, mode="raw")
+    rng = np.random.default_rng(1)
+    q = rng.dirichlet(np.ones(33), size=2).astype(np.float32)
+    p = build_draft_payload(fmt, rng.integers(0, 33, 3), q,
+                            rng.normal(0, 1, 3).astype(np.float32), 2)
+    p2 = fmt.unpack_draft(fmt.pack_draft(p))
+    assert p2 == p
+    _, q_rec, live = draft_arrays(fmt, p2)
+    np.testing.assert_array_equal(q_rec, q)
+    assert live.all()
+
+
+def test_zero_count_entries_pruned():
+    """Support entries whose lattice count rounds to b = 0 are never
+    transmitted: the wire carries only the nonzero counts (the
+    reconstruction is identical — a zero count contributes zero mass)."""
+    V, ell = 64, 10
+    fmt = WireFormat(V=V, ell=ell, L_max=2)
+    q_hat = np.zeros((2, V), np.float32)
+    q_hat[:, 3] = 0.7          # b = [7, 3] on indices {3, 9}; the rest
+    q_hat[:, 9] = 0.3          # of the (conceptual) support carried b=0
+    tokens = np.arange(3)
+    betas = np.zeros(3, np.float32)
+    p = build_draft_payload(fmt, tokens, q_hat, betas, 2)
+    assert p.supports == ((3, 9), (3, 9))
+    assert p.counts == ((7, 3), (7, 3))
+    _, q_rec, _ = draft_arrays(fmt, fmt.unpack_draft(fmt.pack_draft(p)))
+    np.testing.assert_array_equal(q_rec[:2], q_hat[:2])
