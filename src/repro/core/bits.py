@@ -132,6 +132,51 @@ def wire_verdict_bits(V: int, L_max: int) -> int:
 
 
 # ----------------------------------------------------------------------
+# Codec v2 actuals (core/coding.py): the bits the entropy-coded wire
+# REALLY spends, asserted in tests against the entropy references above
+# — coded_subset_bits is within 1 bit of eq. (5)'s log2 C(V,K), the
+# Rice-coded counts sit a small factor above eq. (2)'s composition
+# code, and the whole-message reference below is what BENCH_wire.json
+# measures the coded uplink against.
+# ----------------------------------------------------------------------
+def coded_subset_bits(V: int, K: int) -> int:
+    """Exact bits the v2 enumerative support coder spends: the rank in
+    [0, C(V,K)) occupies (C(V,K) − 1).bit_length() bits."""
+    from repro.core import coding
+    return coding.subset_rank_width(V, K)
+
+
+def coded_counts_bits(counts, ell: int) -> int:
+    """Exact bits the v2 Golomb-Rice count coder spends on one position
+    (the last count is elided — the sum ℓ pins it)."""
+    from repro.core import coding
+    return coding.rice_counts_bits(tuple(counts), ell)
+
+
+def coded_verdict_bits(T: int, new_token: int, V: int, L_max: int) -> int:
+    """Exact pre-padding bits of one v2 downlink verdict."""
+    from repro.core import coding, wire
+    fmt = wire.WireFormat(V=V, ell=2, L_max=L_max)
+    return coding.coded_verdict_bits(
+        fmt, wire.VerdictPayload(n_accept=T, new_token=new_token,
+                                 beta_next=0.0))
+
+
+def draft_message_reference_bits(V: int, ell: int, Ks, L_max: int,
+                                 adaptive: bool = True) -> float:
+    """Entropy reference for a WHOLE uplink message carrying ``len(Ks)``
+    draft positions: eq. (1) per position, plus log2 V per draft id,
+    the n field, and the raw-f32 β trajectory (PRNG-driven side
+    information the codec treats as incompressible).  This is the
+    yardstick the v2 coded payload is measured against."""
+    n = len(Ks)
+    per_tok = sum(float(token_bits(V, float(K), ell, adaptive))
+                  for K in Ks)
+    return (per_tok + n * math.log2(V) + 32.0 * (n + 1)
+            + math.log2(L_max + 1))
+
+
+# ----------------------------------------------------------------------
 # Beyond-paper: gap-coded subset indices.
 #
 # The paper charges log2 C(V,K) for the support set — optimal only if all

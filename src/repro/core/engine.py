@@ -87,6 +87,17 @@ class EngineConfig:
     bit_budget: float = 5000.0       # uplink budget B per batch (bits)
     temperature: float = 1.0
     collect_theory: bool = False     # keep dense q/p for Theorem-1 logging
+    # Wire codec version negotiated for the link (core.wire.CODECS):
+    # "v1" fixed-width fields, "v2" entropy-coded (core.coding).  A
+    # request may override it at admission (admit_slot(wire_codec=...)).
+    wire_codec: str = "v1"
+    # How the edge estimates per-token wire bits when truncating L^t:
+    # "analytic"   — the paper's eq. (1) budget, codec-independent (so
+    #                token streams are identical across codec versions);
+    # "calibrated" — analytic × a per-request online scale (EMA of
+    #                observed coded size / analytic estimate), so the
+    #                budget tracks what the active codec REALLY ships.
+    budget_model: str = "analytic"
 
 
 def _is_stateful(cfg: ModelConfig) -> bool:
@@ -169,6 +180,9 @@ class SpecDraft:
     base_key: jnp.ndarray         # (2,) key consumed (replay register)
     new_key: jnp.ndarray          # (2,) key chain advance on commit
     round: PendingRound           # the speculative round's record
+    # calibrated-budget EMA advance, applied only on commit (so a
+    # mis-speculation leaves the scale exactly where lockstep has it)
+    scale_next: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -185,6 +199,10 @@ class DraftBatch:
     n_live: np.ndarray            # (B,) int
     packed: Dict[int, bytes]      # per committed slot
     t_slm: float
+    # per-slot coded-size EMA advance (calibrated budget model); the
+    # caller decides when it commits (draft() immediately, speculative
+    # drafts only when the premise is confirmed)
+    scale_next: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -305,6 +323,10 @@ class EdgeDraftEngine:
         self.rep_pos = self.pos
         self.rep_beta = self.beta
         self.rep_key = self.keys
+        # per-slot negotiated codec + calibrated-budget state (EMA of
+        # observed coded bits / analytic estimate, reset at admission)
+        self.slot_codec = [self.fmt.codec] * B
+        self.coded_scale = np.ones((B,), np.float64)
 
     def init_slots(self, n_slots: int, cache_len: int,
                    spec: Optional[PagedSpec]):
@@ -326,7 +348,8 @@ class EdgeDraftEngine:
         self.pos = jnp.full((B,), S0 - 1, jnp.int32)
         self.rep_x, self.rep_pos = self.x_last, self.pos
 
-    def admit(self, slot: int, prompt, pt_row, seed: int):
+    def admit(self, slot: int, prompt, pt_row, seed: int,
+              wire_codec: Optional[str] = None):
         S0 = int(prompt.shape[0])
         _, cache1 = self._prefill_jit(self.dp, prompt[None, :-1])
         self.dcache = model_mod.write_prefill_to_slot(
@@ -341,6 +364,8 @@ class EdgeDraftEngine:
         self.rep_pos = self.rep_pos.at[slot].set(S0 - 1)
         self.rep_beta = self.rep_beta.at[slot].set(self.m.beta0)
         self.rep_key = self.rep_key.at[slot].set(key)
+        self.slot_codec[slot] = wire_codec or self.fmt.codec
+        self.coded_scale[slot] = 1.0
 
     def set_tables(self, pt):
         self.dcache = model_mod.set_page_tables(self.dcache, pt)
@@ -357,13 +382,34 @@ class EdgeDraftEngine:
         return ys, new_keys, t_slm
 
     def _live_counts(self, bits: np.ndarray, mask: np.ndarray):
-        """Budget-driven L^t (paper §4): stop when analytic bits exceed
-        the budget, ≥ 1; non-committed rows transmit nothing."""
-        cum = np.cumsum(bits, axis=1)
+        """Budget-driven L^t (paper §4): stop when estimated wire bits
+        exceed the budget, ≥ 1; non-committed rows transmit nothing.
+        Under the calibrated budget model the analytic per-token bits
+        are scaled by each slot's online coded-size ratio."""
+        est = bits
+        if self.e.budget_model == "calibrated":
+            est = bits * self.coded_scale[:, None]
+        cum = np.cumsum(est, axis=1)
         live = cum <= self.e.bit_budget
         live[:, 0] = True
         live &= mask[:, None]
         return live, live.sum(1)
+
+    # calibrated coded-size model: EMA of observed / analytic, clamped
+    # so one degenerate payload cannot wipe out the budget
+    _SCALE_DECAY = 0.7
+    _SCALE_CLIP = (0.25, 8.0)
+
+    def _scale_update(self, slot: int, obs_bits: float,
+                      est_bits: float) -> float:
+        ratio = obs_bits / max(est_bits, 1.0)
+        lo, hi = self._SCALE_CLIP
+        return float(np.clip(self._SCALE_DECAY * self.coded_scale[slot]
+                             + (1.0 - self._SCALE_DECAY) * ratio, lo, hi))
+
+    def commit_scales(self, scale_next: Dict[int, float]):
+        for slot, s in scale_next.items():
+            self.coded_scale[slot] = s
 
     def _build_batch(self, ys, mask: np.ndarray, t_slm: float) -> DraftBatch:
         L = self.e.L_max
@@ -374,7 +420,7 @@ class EdgeDraftEngine:
         dropped = np.asarray(ys["dropped"]).T             # (B, L+1)
         Ks = np.asarray(ys["K"][:L]).T
         live, n_live = self._live_counts(bits, mask)
-        packed = {}
+        packed, scale_next = {}, {}
         for slot in np.nonzero(mask)[0]:
             # slice the committed row ON DEVICE: per-slot drafts
             # (pipelined serving) must not ship the whole (L, B, V)
@@ -383,11 +429,17 @@ class EdgeDraftEngine:
             payload = wire_mod.build_draft_payload(
                 self.fmt, drafts[:, slot], qhat_row, betas[:, slot],
                 int(n_live[slot]))
-            packed[int(slot)] = self.fmt.pack_draft(payload)
+            data = self.fmt.pack_draft(payload,
+                                       codec=self.slot_codec[int(slot)])
+            packed[int(slot)] = data
+            if self.e.budget_model == "calibrated":
+                est = float(bits[slot, :int(n_live[slot])].sum())
+                scale_next[int(slot)] = self._scale_update(
+                    int(slot), len(data) * 8.0, est)
         return DraftBatch(ys=ys, drafts=drafts, betas=betas, bits=bits,
                           gap_bits=gap_bits, dropped=dropped, Ks=Ks,
                           live=live, n_live=n_live, packed=packed,
-                          t_slm=t_slm)
+                          t_slm=t_slm, scale_next=scale_next)
 
     def draft(self, mask: np.ndarray) -> DraftBatch:
         """One draft round, committing key-chain/replay state for rows
@@ -404,7 +456,13 @@ class EdgeDraftEngine:
         self.rep_pos = pos_in
         self.rep_beta = beta_in
         self.rep_key = jnp.where(mj[:, None], key_in, self.rep_key)
-        return self._build_batch(ys, mask, t_slm)
+        batch = self._build_batch(ys, mask, t_slm)
+        # a real draft commits its coded-size observations immediately;
+        # speculative drafts carry theirs in SpecDraft.scale_next and
+        # commit only when the premise is confirmed — so the EMA
+        # advances exactly once per committed round in BOTH schedules
+        self.commit_scales(batch.scale_next)
+        return batch
 
     def pending_round(self, batch: DraftBatch, slot: int) -> PendingRound:
         return PendingRound(slot=slot,
@@ -441,7 +499,8 @@ class EdgeDraftEngine:
         return SpecDraft(slot=slot, in_x=int(x_guess), in_pos=int(pos_next),
                          in_beta=float(beta_next), base_key=base_key,
                          new_key=new_keys[slot],
-                         round=self.pending_round(batch, slot))
+                         round=self.pending_round(batch, slot),
+                         scale_next=batch.scale_next)
 
     def commit_speculative(self, spec: SpecDraft):
         """The verdict confirmed the premise: advance the key chain and
@@ -452,6 +511,7 @@ class EdgeDraftEngine:
         self.rep_pos = self.rep_pos.at[s].set(spec.in_pos)
         self.rep_beta = self.rep_beta.at[s].set(spec.in_beta)
         self.rep_key = self.rep_key.at[s].set(spec.base_key)
+        self.commit_scales(spec.scale_next)
 
     # -- verdict application -------------------------------------------
     def apply_verdict_slot(self, slot: int,
@@ -549,6 +609,7 @@ class CloudVerifyEngine:
         self.rep_x = self.x_last
         self.rep_pos = self.pos
         self.rep_key = self.keys
+        self.slot_codec = [self.fmt.codec] * B   # negotiated per admit
 
     def init_slots(self, n_slots: int, cache_len: int,
                    spec: Optional[PagedSpec]):
@@ -570,11 +631,13 @@ class CloudVerifyEngine:
         self.pos = jnp.full((B,), S0 - 1, jnp.int32)
         self.rep_x, self.rep_pos = self.x_last, self.pos
 
-    def admit(self, slot: int, prompt, pt_row, seed: int):
+    def admit(self, slot: int, prompt, pt_row, seed: int,
+              wire_codec: Optional[str] = None):
         S0 = int(prompt.shape[0])
         _, cache1 = self._prefill_jit(self.tp, prompt[None, :-1])
         self.tcache = model_mod.write_prefill_to_slot(
             self.tc, self.tcache, cache1, slot, pt_row, S0 - 1)
+        self.slot_codec[slot] = wire_codec or self.fmt.codec
         key = cloud_row_key(seed, 0)
         self.x_last = self.x_last.at[slot].set(prompt[-1])
         self.pos = self.pos.at[slot].set(S0 - 1)
@@ -674,9 +737,13 @@ class EdgeCloudEngine:
         self.m, self.e, self.ch = method, engine, channel
         self.seed = seed
         self.V = draft_cfg.vocab
+        assert engine.wire_codec in wire_mod.CODECS, engine.wire_codec
+        assert engine.budget_model in ("analytic", "calibrated"), \
+            engine.budget_model
         self.fmt = wire_mod.WireFormat(
             V=self.V, ell=method.ell, L_max=engine.L_max,
-            mode="raw" if method.name == "uncompressed" else "lattice")
+            mode="raw" if method.name == "uncompressed" else "lattice",
+            codec=engine.wire_codec)
         self.edge = EdgeDraftEngine(draft_cfg, draft_params, method,
                                     engine, self.fmt, seed)
         self.cloud = CloudVerifyEngine(target_cfg, target_params, method,
@@ -798,12 +865,15 @@ class EdgeCloudEngine:
             return True
         return self.alloc.ensure(slot, n_tokens)
 
-    def admit_slot(self, slot: int, prompt, seed: int):
+    def admit_slot(self, slot: int, prompt, seed: int,
+                   wire_codec: Optional[str] = None):
         """Prefill ``prompt`` (1-D int32, ≥ 2 tokens) into ``slot`` on
         BOTH sides of the link.  The request's RNG/β/position state
         restarts from scratch — other slots' caches and controller
         state are untouched (their leaves are only re-packed, not
-        re-computed).
+        re-computed).  ``wire_codec`` overrides the link's negotiated
+        codec version for this request (both actors store the same
+        negotiation, so nothing version-related rides the wire).
 
         Capacity contract: each round writes draft KV up to pos + L_max,
         and pos advances with every accepted token, so the CALLER must
@@ -817,6 +887,8 @@ class EdgeCloudEngine:
         assert S0 + self.e.L_max + 1 <= self.cache_len, \
             f"prompt ({S0}) + draft window ({self.e.L_max + 1}) exceeds " \
             f"slot capacity {self.cache_len}"
+        assert wire_codec is None or wire_codec in wire_mod.CODECS, \
+            wire_codec
         pt_row = None
         if self.paged:
             if not self.alloc.admit(slot, S0 - 1):
@@ -825,8 +897,8 @@ class EdgeCloudEngine:
                     f"({self.alloc.free_pages} free); the scheduler "
                     f"should gate admissions on free_pages()")
             pt_row = self._device_tables()[slot]
-        self.edge.admit(slot, prompt, pt_row, seed)
-        self.cloud.admit(slot, prompt, pt_row, seed)
+        self.edge.admit(slot, prompt, pt_row, seed, wire_codec=wire_codec)
+        self.cloud.admit(slot, prompt, pt_row, seed, wire_codec=wire_codec)
         self.active[slot] = True
         self.out_tokens[slot] = []
 
@@ -887,13 +959,27 @@ class EdgeCloudEngine:
 
     def verify_slots(self, packed: Dict[int, bytes]) -> VerifyBatch:
         """Cloud side of one round for the slots whose payloads arrived:
-        unpack, verify, pack verdicts."""
+        unpack (with each slot's negotiated codec), verify, pack
+        verdicts."""
         mask = np.zeros((self.B,), bool)
         mask[list(packed)] = True
         if self.paged:
             self._push_tables()
-        payloads = wire_mod.unpack_drafts(self.fmt, packed)
+        payloads = wire_mod.unpack_drafts(
+            self.fmt, packed,
+            codecs={s: self.cloud.slot_codec[s] for s in packed})
         return self.cloud.verify(mask, payloads)
+
+    # -- per-slot verdict codec (the downlink mirror of the uplink
+    #    negotiation; events.py and run_round both route through these)
+    def pack_verdict_slot(self, slot: int,
+                          v: wire_mod.VerdictPayload) -> bytes:
+        return self.fmt.pack_verdict(v, codec=self.cloud.slot_codec[slot])
+
+    def unpack_verdict_slot(self, slot: int,
+                            data: bytes) -> wire_mod.VerdictPayload:
+        return self.fmt.unpack_verdict(data,
+                                       codec=self.edge.slot_codec[slot])
 
     def apply_verdict_slot(self, slot: int,
                            verdict: wire_mod.VerdictPayload,
@@ -929,19 +1015,21 @@ class EdgeCloudEngine:
 
         db = self.edge.draft(active)
         # --- the uplink: packed bytes cross, the cloud decodes ---------
-        payloads = wire_mod.unpack_drafts(self.fmt, db.packed)
+        payloads = wire_mod.unpack_drafts(
+            self.fmt, db.packed,
+            codecs={s: self.cloud.slot_codec[s] for s in db.packed})
         wire_bits_row = np.zeros((self.B,), np.float64)
         for slot, data in db.packed.items():
             wire_bits_row[slot] = wire_mod.packed_bits(data)
         vb = self.cloud.verify(active, payloads,
                                collect_p=self.e.collect_theory)
         # --- the downlink: packed verdicts cross back ------------------
-        verdict_packed = {s: self.fmt.pack_verdict(v)
+        verdict_packed = {s: self.pack_verdict_slot(s, v)
                           for s, v in vb.verdicts.items()}
         verdict_bits_row = np.zeros((self.B,), np.float64)
         for slot, data in verdict_packed.items():
             verdict_bits_row[slot] = wire_mod.packed_bits(data)
-        verdicts = {s: self.fmt.unpack_verdict(b)
+        verdicts = {s: self.unpack_verdict_slot(s, b)
                     for s, b in verdict_packed.items()}
         emitted = self.edge.apply_verdicts_batch(active, verdicts, db)
         for b in range(self.B):

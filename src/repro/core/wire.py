@@ -23,7 +23,7 @@ Downlink message (one per request per SD round), ``VerdictPayload``:
   * the accepted-prefix length T, the resampled/bonus token, and the
     backtracked β_{T} the edge must resume from.
 
-Wire format (fixed-width fields, MSB first, byte-padded at the end):
+Wire format v1 (fixed-width fields, MSB first, byte-padded at the end):
 
     draft   := n:⌈log2(L+1)⌉ tokens:n×⌈log2 V⌉
                { K:⌈log2(V+1)⌉ [idx:⌈log2 V⌉]×K cnt:⌈log2(ℓ+1)⌉×K }×n
@@ -32,10 +32,21 @@ Wire format (fixed-width fields, MSB first, byte-padded at the end):
                (the "uncompressed" baseline — exact, 32 bpp)
     verdict := T:⌈log2(L+1)⌉ token:⌈log2 V⌉ beta:32
 
-``core.bits.wire_token_bits`` reproduces the per-token field widths
-analytically; ``tests/test_wire.py`` asserts packed sizes match it
-exactly (modulo byte padding) and bound the documented overhead over the
-paper's entropy-optimal budgets (fixed-width index lists vs log2 C(V,K)).
+Wire format v2 (``core.coding``) entropy-codes the same payloads: a
+1-bit mode flag, then either the exact v1 body (fallback — v2 is never
+more than one bit longer than v1) or a coded body where draft ids and
+per-position cardinalities ride a range coder (uniform / adaptive
+frequency models), each support set is an enumerative rank in exactly
+⌈log2 C(V,K)⌉ bits, lattice counts are Golomb-Rice coded with the last
+count elided, and verdict accept-lengths take a short Rice code.  The
+codec version is negotiated per link (``WireFormat.codec``) with a
+per-request override (``codec=`` on pack/unpack) the engine threads
+through its admit path.
+
+``core.bits.wire_token_bits`` reproduces the v1 per-token field widths
+analytically and ``core.bits.coded_*_bits`` the v2 actuals;
+``tests/test_wire.py`` asserts packed sizes match (modulo byte padding)
+and that v2 closes the documented fixed-width vs entropy gap.
 
 Everything here is host-side numpy — payloads are built from device
 arrays AFTER a round, never inside a traced function.
@@ -73,6 +84,12 @@ class BitWriter:
     def write_f32(self, values):
         v = np.asarray(values, np.float32).reshape(-1)
         self.write(v.view(np.uint32), 32)
+
+    def extend(self, other: "BitWriter"):
+        """Append another writer's bits (codec v2 composes a mode flag
+        with a separately-built body)."""
+        self._chunks.extend(other._chunks)
+        self.n_bits += other.n_bits
 
     def getvalue(self) -> bytes:
         if not self._chunks:
@@ -123,6 +140,13 @@ class VerdictPayload:
     beta_next: float
 
 
+# Codec versions both ends understand.  v1 packs fixed-width fields;
+# v2 (core.coding) entropy-codes the support sets, lattice counts and
+# structure symbols — negotiated per link (WireFormat.codec) with a
+# per-request override threaded through the engine's admit path.
+CODECS = ("v1", "v2")
+
+
 @dataclasses.dataclass(frozen=True)
 class WireFormat:
     """Static codec parameters shared by both ends of the link."""
@@ -130,6 +154,18 @@ class WireFormat:
     ell: int                     # lattice resolution
     L_max: int                   # max drafts per round
     mode: str = "lattice"        # lattice | raw ("uncompressed" baseline)
+    codec: str = "v1"            # negotiated default codec version
+
+    def __post_init__(self):
+        assert self.codec in CODECS, self.codec
+
+    def _codec(self, codec: Optional[str]) -> str:
+        c = codec or self.codec
+        assert c in CODECS, c
+        # the raw ("uncompressed") baseline is exact f32 probabilities by
+        # construction — entropy-coding the baseline would defeat its
+        # purpose, so raw payloads always use the v1 layout
+        return "v1" if self.mode == "raw" else c
 
     @property
     def n_field(self) -> int:
@@ -148,10 +184,10 @@ class WireFormat:
         return field_width(self.ell)
 
     # -- draft ----------------------------------------------------------
-    def pack_draft(self, p: DraftPayload) -> bytes:
+    def write_draft_body(self, w: BitWriter, p: DraftPayload):
+        """The v1 fixed-width body (also codec v2's fallback mode)."""
         n = p.n_drafts
         assert n <= self.L_max and len(p.betas) == n + 1
-        w = BitWriter()
         w.write([n], self.n_field)
         w.write(list(p.tokens), self.tok_field)
         if self.mode == "raw":
@@ -167,10 +203,24 @@ class WireFormat:
                     w.write(list(sup), self.tok_field)
                 w.write(list(cnt), self.cnt_field)
         w.write_f32(list(p.betas))
+
+    def pack_draft(self, p: DraftPayload,
+                   codec: Optional[str] = None) -> bytes:
+        if self._codec(codec) == "v2":
+            from repro.core import coding
+            return coding.pack_draft_v2(self, p)
+        w = BitWriter()
+        self.write_draft_body(w, p)
         return w.getvalue()
 
-    def unpack_draft(self, data: bytes) -> DraftPayload:
-        r = BitReader(data)
+    def unpack_draft(self, data: bytes,
+                     codec: Optional[str] = None) -> DraftPayload:
+        if self._codec(codec) == "v2":
+            from repro.core import coding
+            return coding.unpack_draft_v2(self, data)
+        return self.read_draft_body(BitReader(data))
+
+    def read_draft_body(self, r: BitReader) -> DraftPayload:
         n = int(r.read(self.n_field)[0])
         tokens = tuple(int(t) for t in r.read(self.tok_field, n))
         supports, counts, probs = [], [], []
@@ -197,15 +247,28 @@ class WireFormat:
                             else None)
 
     # -- verdict --------------------------------------------------------
-    def pack_verdict(self, v: VerdictPayload) -> bytes:
-        w = BitWriter()
+    def write_verdict_body(self, w: BitWriter, v: VerdictPayload):
         w.write([v.n_accept], self.n_field)
         w.write([v.new_token], self.tok_field)
         w.write_f32([v.beta_next])
+
+    def pack_verdict(self, v: VerdictPayload,
+                     codec: Optional[str] = None) -> bytes:
+        if self._codec(codec) == "v2":
+            from repro.core import coding
+            return coding.pack_verdict_v2(self, v)
+        w = BitWriter()
+        self.write_verdict_body(w, v)
         return w.getvalue()
 
-    def unpack_verdict(self, data: bytes) -> VerdictPayload:
-        r = BitReader(data)
+    def unpack_verdict(self, data: bytes,
+                       codec: Optional[str] = None) -> VerdictPayload:
+        if self._codec(codec) == "v2":
+            from repro.core import coding
+            return coding.unpack_verdict_v2(self, data)
+        return self.read_verdict_body(BitReader(data))
+
+    def read_verdict_body(self, r: BitReader) -> VerdictPayload:
         return VerdictPayload(
             n_accept=int(r.read(self.n_field)[0]),
             new_token=int(r.read(self.tok_field)[0]),
@@ -269,7 +332,11 @@ def packed_bits(data: bytes) -> float:
     return float(len(data) * 8)
 
 
-def unpack_drafts(fmt: WireFormat,
-                  packed: Dict[int, bytes]) -> Dict[int, DraftPayload]:
-    """Batch helper: decode one round's per-slot uplink messages."""
-    return {slot: fmt.unpack_draft(b) for slot, b in packed.items()}
+def unpack_drafts(fmt: WireFormat, packed: Dict[int, bytes],
+                  codecs: Optional[Dict[int, str]] = None
+                  ) -> Dict[int, DraftPayload]:
+    """Batch helper: decode one round's per-slot uplink messages with
+    each slot's negotiated codec version."""
+    codecs = codecs or {}
+    return {slot: fmt.unpack_draft(b, codec=codecs.get(slot))
+            for slot, b in packed.items()}

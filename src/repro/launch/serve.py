@@ -64,6 +64,16 @@ def main():
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--L-max", type=int, default=8)
     ap.add_argument("--bit-budget", type=float, default=5000.0)
+    ap.add_argument("--wire-codec", default="v1", choices=["v1", "v2"],
+                    help="wire codec version: v1 fixed-width fields, "
+                         "v2 entropy-coded (enumerative support sets, "
+                         "Rice counts, range-coded structure)")
+    ap.add_argument("--budget-model", default="analytic",
+                    choices=["analytic", "calibrated"],
+                    help="L^t bit-budget estimate: the analytic eq.(1) "
+                         "formula, or analytic x a per-request online "
+                         "coded-size ratio (tracks what the codec "
+                         "actually ships)")
     ap.add_argument("--uplink-bps", type=float, default=1e6)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
@@ -116,7 +126,9 @@ def main():
         MethodConfig(args.method, K=args.K, ell=args.ell, alpha=args.alpha,
                      eta=args.eta),
         EngineConfig(L_max=args.L_max, bit_budget=args.bit_budget,
-                     temperature=args.temperature),
+                     temperature=args.temperature,
+                     wire_codec=args.wire_codec,
+                     budget_model=args.budget_model),
         ChannelConfig(uplink_bps=args.uplink_bps),
         seed=args.seed)
 
@@ -141,7 +153,7 @@ def main():
               else "dense")
         print(f"[serve --trace] {tc.name} <- {dc.name}  "
               f"method={args.method} policy={args.policy} "
-              f"pipeline={args.pipeline} "
+              f"pipeline={args.pipeline} codec={args.wire_codec} "
               f"rate={args.rate}/s slots={args.max_batch} kv={kv}")
         for k, v in rep.summary().items():
             if isinstance(v, float):
@@ -158,7 +170,8 @@ def main():
     prompts = data.sample(args.batch, args.prompt_len)[:, :-1]
     rounds, tokens = eng.run(prompts, args.rounds)
     s = summarize(rounds)
-    print(f"[serve] {tc.name} <- {dc.name}  method={args.method}")
+    print(f"[serve] {tc.name} <- {dc.name}  method={args.method} "
+          f"codec={args.wire_codec}")
     for k, v in s.items():
         print(f"  {k:24s} {v:.6g}")
     t = rounds[-1]

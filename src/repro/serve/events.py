@@ -166,7 +166,8 @@ class EventDrivenLoop:
         for slot, req in self.sched.schedule(self.now,
                                              can_admit=self._worst_case_gate()):
             assert self.sess._cache_need(req) <= self.sess.cache_len
-            self.eng.admit_slot(slot, req.prompt, req.seed)
+            self.eng.admit_slot(slot, req.prompt, req.seed,
+                                wire_codec=req.wire_codec)
             self.slots[slot] = _SlotCtx(req=req)
             self.sess.peak_active = max(self.sess.peak_active,
                                         self.sched.n_active)
@@ -217,13 +218,14 @@ class EventDrivenLoop:
 
     def _on_verify_done(self, data):
         batch, vb = data
-        fmt = self.eng.fmt
         for slot in batch:
-            data_v = fmt.pack_verdict(vb.verdicts[slot])
+            # per-slot negotiated codec (wire codec v2 entropy-codes the
+            # verdict); the edge decodes with the same negotiation
+            data_v = self.eng.pack_verdict_slot(slot, vb.verdicts[slot])
             t_down = channel_mod.downlink_time(self.ch,
                                                len(data_v) * 8)
             self._push(self.now + t_down, DOWNLINK_ARRIVE,
-                       (slot, fmt.unpack_verdict(data_v)))
+                       (slot, self.eng.unpack_verdict_slot(slot, data_v)))
         if self.cloud_queue:                 # work queued while busy
             self._start_verify()
 

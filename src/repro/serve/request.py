@@ -30,6 +30,8 @@ class Request:
     max_new_tokens: int = 64
     eos_id: Optional[int] = None       # None: length-only termination
     seed: int = 0                      # per-request RNG root (engine.row_key)
+    wire_codec: Optional[str] = None   # per-request codec version override
+                                       # (None: the link's negotiated default)
 
     # -- runtime state (owned by the scheduler/session) ----------------
     state: RequestState = RequestState.QUEUED

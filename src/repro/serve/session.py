@@ -209,7 +209,8 @@ class ServeSession:
         for slot, req in self.sched.schedule(self.now, can_admit=gate):
             assert self._cache_need(req) <= self.cache_len, \
                 f"request {req.rid} exceeds cache_len {self.cache_len}"
-            self.engine.admit_slot(slot, req.prompt, req.seed)
+            self.engine.admit_slot(slot, req.prompt, req.seed,
+                                   wire_codec=req.wire_codec)
 
     def _grow_or_preempt(self):
         """Grow every active slot's draft window; on pool exhaustion

@@ -434,6 +434,146 @@ def test_pipelined_wire_bits_drive_uplink(pair):
     assert 0.1 * m["bits_row"][0] < w[0] < 50 * m["bits_row"][0] + 4096
 
 
+def test_shared_uplink_charging_is_codec_agnostic():
+    """Switching codec mid-trace (per-request codec versions sharing one
+    link) must charge each payload's bytes plus EXACTLY one framing
+    overhead — no double-charged framing, utilization finite."""
+    from repro.core.wire import DraftPayload, WireFormat
+    ch = ChannelConfig(uplink_bps=1e4, per_msg_overhead_bits=256.0,
+                       rtt_s=0.0)
+    link = SharedUplink(ch)
+    rng = np.random.default_rng(0)
+    fmt = WireFormat(V=128, ell=50, L_max=4)
+    total = 0.0
+    now = 0.0
+    for i in range(12):
+        K = int(rng.integers(1, 40))
+        sup = np.sort(rng.choice(128, K, replace=False))
+        cut = np.sort(rng.choice(49, K - 1, replace=False)) + 1
+        cnt = np.diff(np.concatenate([[0], cut, [50]]))
+        p = DraftPayload(tokens=(int(rng.integers(0, 128)),),
+                         supports=(tuple(int(x) for x in sup),),
+                         counts=(tuple(int(c) for c in cnt),),
+                         betas=(0.0, 0.0))
+        codec = "v2" if i % 2 else "v1"        # mid-trace codec switch
+        data = fmt.pack_draft(p, codec=codec)
+        tx = link.transmit(now, len(data) * 8)
+        total += (len(data) * 8 + ch.per_msg_overhead_bits) / ch.uplink_bps
+        now = tx.end_s
+    assert link.busy_total_s == pytest.approx(total)
+    u = link.utilization(now)
+    assert np.isfinite(u) and 0.0 < u <= 1.0
+
+
+def test_codec_switch_mid_trace_streams_and_accounting(pair):
+    """A trace whose requests negotiate DIFFERENT codec versions must
+    emit the same per-request token streams as an all-v1 run (the codec
+    moves bytes, never tokens), finish everyone, and keep the shared
+    uplink's utilization finite in both schedules."""
+    trace_cfg = TraceConfig(
+        n_requests=4, rate_rps=6.0, prompt_len=10, min_new_tokens=4,
+        max_new_tokens=9, vocab=512, seed=3)
+    kw = dict(max_batch=2, cache_len=64, t_slm_s=0.01, t_llm_s=0.02)
+
+    def run(codecs, pipeline):
+        trace = poisson_trace(trace_cfg)
+        for req, c in zip(trace, codecs):
+            req.wire_codec = c
+        sess = ServeSession(_engine(pair), ServeConfig(
+            pipeline=pipeline, **kw))
+        rep = sess.run_trace(trace)
+        assert rep.n_finished == 4
+        assert np.isfinite(rep.uplink_utilization)
+        assert 0.0 < rep.uplink_utilization <= 1.0
+        return {r.rid: tuple(r.tokens) for r in rep.requests}
+
+    mixed = ["v1", "v2", "v2", "v1"]
+    base = run(["v1"] * 4, "lockstep")
+    assert run(mixed, "lockstep") == base
+    assert run(mixed, "pipelined") == base
+
+
+def test_wire_codec_v2_streams_match_v1(pair):
+    """Engine-negotiated codec v2: identical token streams to v1 under
+    BOTH schedules, and a strictly smaller uplink footprint."""
+    dc, dp, tc, tp = pair
+
+    def eng(codec):
+        return EdgeCloudEngine(dc, dp, tc, tp, METHOD,
+                               EngineConfig(L_max=L_MAX,
+                                            wire_codec=codec), seed=0)
+
+    trace_cfg = TraceConfig(
+        n_requests=4, rate_rps=6.0, prompt_len=10, min_new_tokens=4,
+        max_new_tokens=9, vocab=512, seed=3)
+    kw = dict(max_batch=2, cache_len=64, t_slm_s=0.01, t_llm_s=0.02)
+    reps = {}
+    for codec in ("v1", "v2"):
+        for pipe in ("lockstep", "pipelined"):
+            rep = ServeSession(eng(codec), ServeConfig(
+                pipeline=pipe, **kw)).run_trace(poisson_trace(trace_cfg))
+            reps[(codec, pipe)] = rep
+    streams = {k: {r.rid: tuple(r.tokens) for r in rep.requests}
+               for k, rep in reps.items()}
+    vals = list(streams.values())
+    assert all(v == vals[0] for v in vals)
+    # fewer bits -> the v2 link is never busier than the v1 link
+    assert reps[("v2", "lockstep")].uplink_utilization < \
+        reps[("v1", "lockstep")].uplink_utilization
+
+
+def test_calibrated_budget_streams_lockstep_vs_pipelined(pair):
+    """The online coded-size model advances exactly once per committed
+    round (speculative drafts stash their update until the premise is
+    confirmed), so calibrated budgeting must keep lockstep and
+    pipelined streams bit-identical."""
+    dc, dp, tc, tp = pair
+
+    def eng():
+        return EdgeCloudEngine(
+            dc, dp, tc, tp, METHOD,
+            EngineConfig(L_max=L_MAX, wire_codec="v2",
+                         budget_model="calibrated",
+                         bit_budget=2000.0), seed=0)
+
+    trace_cfg = TraceConfig(
+        n_requests=4, rate_rps=6.0, prompt_len=10, min_new_tokens=4,
+        max_new_tokens=9, vocab=512, seed=3)
+    kw = dict(max_batch=2, cache_len=64, t_slm_s=0.01, t_llm_s=0.02)
+    streams = {}
+    for pipe in ("lockstep", "pipelined"):
+        rep = ServeSession(eng(), ServeConfig(
+            pipeline=pipe, **kw)).run_trace(poisson_trace(trace_cfg))
+        assert rep.n_finished == 4
+        streams[pipe] = {r.rid: tuple(r.tokens) for r in rep.requests}
+    assert streams["lockstep"] == streams["pipelined"]
+
+
+def test_calibrated_budget_tracks_observed_coded_sizes(pair):
+    """After a few rounds the calibrated estimate must predict the
+    packed size better than the raw analytic formula does."""
+    dc, dp, tc, tp = pair
+    eng = EdgeCloudEngine(
+        dc, dp, tc, tp, METHOD,
+        EngineConfig(L_max=L_MAX, wire_codec="v2",
+                     budget_model="calibrated"), seed=0)
+    eng.init_slots(1, 64)
+    eng.admit_slot(0, _req(0).prompt, 7)
+    err_cal, err_ana = [], []
+    for _ in range(6):
+        # the scale this round's L^t actually used — read BEFORE the
+        # round folds its own observation into the EMA
+        scale = float(eng.edge.coded_scale[0])
+        m = eng.run_round()
+        obs = float(m["wire_bits_row"][0])
+        est = float(m["bits_row"][0])
+        err_ana.append(abs(obs - est))
+        err_cal.append(abs(obs - est * scale))
+    # scale must have moved off its 1.0 prior and toward the truth
+    assert float(eng.edge.coded_scale[0]) != 1.0
+    assert np.mean(err_cal[1:]) < np.mean(err_ana[1:])
+
+
 def test_high_load_rejects_and_still_completes(pair):
     dc, dp, tc, tp = pair
     trace = poisson_trace(TraceConfig(
