@@ -32,11 +32,22 @@ costs — host timing noise must not decide a scheduler comparison):
             β side info), end-to-end latency across uplink bandwidths,
             and the calibrated online coded-size budget model's fit.
 
+  cells     multi-cell topology (serve/cells.py) in the DOWNLINK-
+            LIMITED regime (broadcast <= 1 Mbit/s): the same workload
+            served through {1, 2, 4} radio cells — per-cell uplinks and
+            broadcast downlinks, one cloud verifier — with verdict
+            batching off vs on.  Token streams must be identical to the
+            single-cell reference everywhere; batching (one coded
+            frame per cell per round instead of one framed message per
+            verdict) must strictly cut downlink bits/round.
+
 Results go to experiments/bench/serve_load.csv and the perf-trajectory
 JSONs CI tracks: experiments/bench/BENCH_serve.json (throughput, p50/p95
 latency, peak pages, preemptions), experiments/bench/BENCH_pipeline.json
-(lockstep-vs-pipelined latency, spec hit rate) and experiments/bench/
-BENCH_wire.json (v1-vs-v2 bits/round and latency, reference ratio).
+(lockstep-vs-pipelined latency, spec hit rate), experiments/bench/
+BENCH_wire.json (v1-vs-v2 bits/round and latency, reference ratio) and
+experiments/bench/BENCH_cells.json (per-topology downlink bits/round,
+batching ratio, makespans).
 
     PYTHONPATH=src python -m benchmarks.serve_load --smoke
     PYTHONPATH=src python -m benchmarks.serve_load            # trained pair
@@ -340,6 +351,81 @@ def wire_study(pair, n_rounds, batch, prompt_len, n_requests, max_batch,
     return out
 
 
+def cell_study(pair, n_requests, prompt_len, min_new, max_new, rate,
+               method, ecfg, t_slm, t_llm, cache_len,
+               cell_grid=(1, 2, 4), downlink_bps=5e5):
+    """Multi-cell serving in the downlink-limited regime: the broadcast
+    carries one framed message per verdict (off) or one coded frame per
+    cell per round (on).  Slots are provisioned at 2 per cell for the
+    LARGEST topology so every cell has concurrency to coalesce — the
+    regime where batching matters — and the total slot count is fixed
+    across topologies, so every run shares one engine shape AND one
+    token-stream reference."""
+    dc, dp, tc, tp = pair
+    max_batch = 2 * max(cell_grid)
+    channel = ChannelConfig(downlink_bps=downlink_bps)
+    trace_cfg = TraceConfig(
+        n_requests=n_requests, rate_rps=rate, prompt_len=prompt_len,
+        min_new_tokens=min_new, max_new_tokens=max_new, vocab=tc.vocab,
+        seed=19, cells=max(cell_grid))
+    out = {"downlink_bps": downlink_bps,
+           "uplink_bps": channel.uplink_bps, "rate_rps": rate,
+           "n_requests": n_requests, "max_batch": max_batch,
+           "cell_grid": list(cell_grid), "topologies": []}
+    streams = {}
+    for n_cells in cell_grid:
+        row = {"n_cells": n_cells}
+        for batch in (False, True):
+            for pipeline in ("lockstep", "pipelined"):
+                eng = EdgeCloudEngine(dc, dp, tc, tp, method, ecfg,
+                                      channel, seed=0)
+                sess = ServeSession(eng, ServeConfig(
+                    max_batch=max_batch, cache_len=cache_len,
+                    pipeline=pipeline, n_cells=n_cells,
+                    verdict_batch=batch, t_slm_s=t_slm, t_llm_s=t_llm))
+                rep = sess.run_trace(poisson_trace(trace_cfg))
+                streams[(n_cells, batch, pipeline)] = {
+                    r.rid: tuple(r.tokens) for r in rep.requests}
+                key = ("batched" if batch else "per_verdict") \
+                    + "_" + pipeline
+                row[key] = {
+                    "makespan_s": rep.makespan_s,
+                    "latency_mean_s": rep.latency_mean_s,
+                    "n_rounds": rep.n_rounds,
+                    "downlink_bits_total": rep.downlink_bits_total,
+                    "downlink_msgs": rep.downlink_msgs,
+                    "downlink_bits_per_round": rep.downlink_bits_total
+                    / max(rep.n_rounds, 1),
+                    "downlink_utilization": rep.downlink_utilization,
+                    "uplink_utilization": rep.uplink_utilization,
+                    "uplink_wait_mean_s": rep.uplink_wait_mean_s,
+                    "n_finished": rep.n_finished,
+                }
+        # the gate compares LOCKSTEP bits/round: rounds are well-defined
+        # barriers there, and identical streams pin the round count
+        pv, bt = row["per_verdict_lockstep"], row["batched_lockstep"]
+        row["verdict"] = {
+            "downlink_bits_ratio": bt["downlink_bits_per_round"]
+            / max(pv["downlink_bits_per_round"], 1e-9),
+            "batching_reduces_bits": bt["downlink_bits_per_round"]
+            < pv["downlink_bits_per_round"],
+            "batching_reduces_msgs": bt["downlink_msgs"]
+            < pv["downlink_msgs"],
+        }
+        out["topologies"].append(row)
+    ref = streams[(cell_grid[0], False, "lockstep")]
+    out["verdict"] = {
+        "streams_identical": all(s == ref for s in streams.values()),
+        "bits_ratios": [r["verdict"]["downlink_bits_ratio"]
+                        for r in out["topologies"]],
+        "ok": (all(s == ref for s in streams.values())
+               and all(r["verdict"]["batching_reduces_bits"]
+                       and r["verdict"]["batching_reduces_msgs"]
+                       for r in out["topologies"])),
+    }
+    return out
+
+
 def run(smoke: bool = False):
     if smoke:
         pair = _smoke_pair()
@@ -379,6 +465,11 @@ def run(smoke: bool = False):
                       max_new=max_new, rate=max(rates), method=method,
                       ecfg=ecfg, t_slm=t_slm, t_llm=t_llm,
                       cache_len=cache_len, smoke=smoke)
+    cells = cell_study(pair, n_requests=10 if smoke else n_requests,
+                       prompt_len=prompt_len, min_new=min_new,
+                       max_new=max_new, rate=max(rates), method=method,
+                       ecfg=ecfg, t_slm=t_slm, t_llm=t_llm,
+                       cache_len=cache_len)
     path = common.emit_csv("serve_load", rows, KEYS)
     jpath = os.path.join(os.path.dirname(path), "BENCH_serve.json")
     with open(jpath, "w") as f:
@@ -396,7 +487,13 @@ def run(smoke: bool = False):
         json.dump({"schema": "BENCH_wire/v1", "smoke": smoke,
                    "t_slm_s": t_slm, "t_llm_s": t_llm,
                    "wire_study": wire}, f, indent=2)
-    return rows, paged, pipe, wire, path, jpath, ppath, wpath
+    cpath = os.path.join(os.path.dirname(path), "BENCH_cells.json")
+    with open(cpath, "w") as f:
+        json.dump({"schema": "BENCH_cells/v1", "smoke": smoke,
+                   "t_slm_s": t_slm, "t_llm_s": t_llm,
+                   "cell_study": cells}, f, indent=2)
+    return rows, paged, pipe, wire, cells, path, jpath, ppath, wpath, \
+        cpath
 
 
 def main():
@@ -404,7 +501,7 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="random-init smoke pair, reduced grid")
     args = ap.parse_args()
-    rows, paged, pipe, wire, path, jpath, ppath, wpath = \
+    rows, paged, pipe, wire, cells, path, jpath, ppath, wpath, cpath = \
         run(smoke=args.smoke)
     for r in rows:
         print(f"{r['policy']:10s} rate={r['rate_rps']:5.1f}/s "
@@ -467,10 +564,32 @@ def main():
           f"= {wv['bits_ratio_v2_v1']:.2f}x, v2/reference = "
           f"{wv['ratio_to_reference']:.3f} (<= 1.15), identical streams:"
           f" {wv['streams_identical']}")
+    # headline 5: through any number of cells, with or without verdict
+    # batching, the streams must match the single-cell reference — and
+    # in the downlink-limited regime one coded frame per cell per round
+    # must strictly cut downlink bits AND messages vs per-verdict
+    # broadcasts
+    cv = cells["verdict"]
+    for row in cells["topologies"]:
+        pv = row["per_verdict_lockstep"]
+        bt = row["batched_lockstep"]
+        print(f"cells={row['n_cells']}  downlink="
+              f"{cells['downlink_bps']:.0f}bps: bits/round "
+              f"{pv['downlink_bits_per_round']:.0f} -> "
+              f"{bt['downlink_bits_per_round']:.0f} "
+              f"(x{row['verdict']['downlink_bits_ratio']:.2f}), msgs "
+              f"{pv['downlink_msgs']} -> {bt['downlink_msgs']}, "
+              f"makespan {pv['makespan_s']:.3f}s -> "
+              f"{bt['makespan_s']:.3f}s")
+    ratios = ", ".join(f"{r:.2f}x" for r in cv["bits_ratios"])
+    print(f"[{'PASS' if cv['ok'] else 'FAIL'}-CELLS] batched/per-verdict"
+          f" downlink bits/round = [{ratios}] (identical streams: "
+          f"{cv['streams_identical']})")
     print("->", path)
     print("->", jpath)
     print("->", ppath)
     print("->", wpath)
+    print("->", cpath)
 
 
 if __name__ == "__main__":

@@ -5,12 +5,19 @@ End-to-end latency per SD batch t:
 The compute terms are measured (wall-clock) or modeled; the link terms are
 bits / rate + per-message overhead.
 
-Serving (repro.serve) extends the single-stream model with a CONTENDED
-link: the cloud's ingress is one shared uplink over which every live
-request's per-round payload is serialised FIFO.  ``SharedUplink`` tracks
-the busy-until time of the link so each transmission sees the queueing
-delay induced by the requests scheduled ahead of it — this is what turns
-the paper's bit budgets into per-request latency under load.
+Serving (repro.serve) extends the single-stream model with CONTENDED
+links: each radio cell's ingress is one shared uplink over which every
+live request's per-round payload is serialised FIFO, and its egress is
+one shared broadcast DOWNLINK over which the cloud's verdicts are
+serialised the same way.  ``SharedUplink`` / ``SharedDownlink`` track
+the busy-until time of their link so each transmission sees the
+queueing delay induced by the messages scheduled ahead of it — this is
+what turns the paper's bit budgets into per-request latency under
+load.  The downlink model matters in the regimes PR 5 opens: at
+broadcast rates ≤ 1 Mbit/s the per-verdict serialisation (framing
+overhead × active requests) dominates the round, which is what verdict
+batching (one coded frame per cell, ``wire.pack_verdict_batch``)
+amortises.
 
 What rides the links (since the engine disaggregation): the UPLINK
 carries packed ``wire.DraftPayload`` bytes and the DOWNLINK packed
@@ -59,37 +66,74 @@ class Transmission(NamedTuple):
     wait_s: float         # queueing delay behind earlier transmissions
 
 
-class SharedUplink:
-    """FIFO contended uplink shared by all live edge devices.
-
-    One transmission occupies the link for
-        (bits + per_msg_overhead_bits) / uplink_bps
+class SharedLink:
+    """FIFO contended link: one transmission occupies the wire for
+        (bits + per_msg_overhead_bits) / rate_bps
     seconds; propagation (rtt/2) is added after serialisation and does
     not occupy the link.  ``transmit`` is called in scheduling order, so
-    per-request ``wait_s`` is the head-of-line blocking each request
-    experiences on the shared link."""
+    per-message ``wait_s`` is the head-of-line blocking each message
+    experiences.  FIFO is the fairness contract the serving tests pin:
+    a message's slot on the wire is fixed the moment ``transmit`` runs,
+    so a later arrival — however large — can never displace it."""
 
-    def __init__(self, ch: ChannelConfig):
+    def __init__(self, ch: ChannelConfig, rate_bps: float):
         self.ch = ch
+        self.rate_bps = rate_bps
         self.busy_until_s = 0.0
         self.busy_total_s = 0.0
+        self.payload_bits_total = 0.0   # excludes per-message framing
+        self.n_msgs = 0
 
     def reset(self):
         self.busy_until_s = 0.0
         self.busy_total_s = 0.0
+        self.payload_bits_total = 0.0
+        self.n_msgs = 0
+
+    @property
+    def bits_total(self) -> float:
+        """Everything the wire carried: payloads plus one framing
+        overhead per message."""
+        return (self.payload_bits_total
+                + self.n_msgs * self.ch.per_msg_overhead_bits)
 
     def transmit(self, now_s: float, bits: float) -> Transmission:
         assert bits >= 0.0, f"negative payload ({bits} bits)"
         start = max(now_s, self.busy_until_s)
-        dur = (bits + self.ch.per_msg_overhead_bits) / self.ch.uplink_bps
+        dur = (bits + self.ch.per_msg_overhead_bits) / self.rate_bps
         end = start + dur
         self.busy_until_s = end
         self.busy_total_s += dur
+        self.payload_bits_total += bits
+        self.n_msgs += 1
         return Transmission(start, end, end + self.ch.rtt_s / 2,
                             start - now_s)
 
     def utilization(self, horizon_s: float) -> float:
-        """Fraction of [0, horizon] the link spent serialising bits."""
+        """Fraction of [0, horizon] the link spent serialising bits.
+        An empty or degenerate window (zero load, zero horizon) is 0.0,
+        never NaN."""
         if horizon_s <= 0:
             return 0.0
         return min(1.0, self.busy_total_s / horizon_s)
+
+
+class SharedUplink(SharedLink):
+    """The cell's contended edge→cloud ingress (DraftPayload bytes)."""
+
+    def __init__(self, ch: ChannelConfig):
+        super().__init__(ch, ch.uplink_bps)
+
+
+class SharedDownlink(SharedLink):
+    """The cell's shared cloud→edge broadcast (VerdictPayload bytes).
+
+    Verdicts destined for the same cell serialise FIFO on this one
+    carrier — per-verdict when verdict batching is off (each message
+    pays ``per_msg_overhead_bits``), or as one coalesced coded frame
+    per verify batch (``wire.pack_verdict_batch``) when it is on.  At
+    broadcast rates far below the uplink this link, not the uplink, is
+    the round's bottleneck."""
+
+    def __init__(self, ch: ChannelConfig):
+        super().__init__(ch, ch.downlink_bps)

@@ -493,3 +493,71 @@ def coded_verdict_bits(fmt, v: VerdictPayload) -> int:
     fmt.write_verdict_body(v1, v)
     _, body = _choose_body(_encode_verdict(fmt, v), v1)
     return 1 + body.n_bits
+
+
+# ======================================================================
+# Verdict BATCH codec v2 (one coded downlink frame per cell)
+# ======================================================================
+def _encode_verdict_batch(fmt, items, n_slots: int) -> Optional[BitWriter]:
+    """Coded frame body: count + slot ids fixed-width, then ONE
+    range-coded run over the accept-length residues L_max − T (an
+    adaptive model shared by every verdict in the frame — the batch
+    analogue of the per-message Rice code, amortising the model's
+    learning the way the frame amortises framing), new tokens under a
+    uniform model, β values raw f32 (incompressible side info)."""
+    for s, v in items:
+        if not (0 <= v.n_accept <= fmt.L_max and 0 <= v.new_token < fmt.V):
+            return None
+    if fmt.V > MAX_TOTAL:        # token alphabet exceeds the coder
+        return None
+    w = BitWriter()
+    w.write([len(items)], 8)
+    sf = fmt.slot_field(n_slots)
+    w.write([s for s, _ in items], sf)
+    enc = RangeEncoder(w)
+    resid_model = AdaptiveModel(fmt.L_max + 1)
+    tok_model = UniformModel(fmt.V)
+    for _, v in items:
+        enc.encode_symbol(resid_model, fmt.L_max - v.n_accept)
+    for _, v in items:
+        enc.encode_symbol(tok_model, v.new_token)
+    enc.flush()
+    w.write_f32([v.beta_next for _, v in items])
+    return w
+
+
+def _decode_verdict_batch(fmt, r: BitReader, n_slots: int):
+    m = int(r.read(8)[0])
+    sf = fmt.slot_field(n_slots)
+    slots = [int(s) for s in r.read(sf, m)]
+    dec = RangeDecoder(r)
+    resid_model = AdaptiveModel(fmt.L_max + 1)
+    tok_model = UniformModel(fmt.V)
+    Ts = [fmt.L_max - dec.decode_symbol(resid_model) for _ in range(m)]
+    toks = [dec.decode_symbol(tok_model) for _ in range(m)]
+    betas = [float(b) for b in r.read_f32(m)]
+    return [(s, VerdictPayload(n_accept=T, new_token=t, beta_next=b))
+            for s, T, t, b in zip(slots, Ts, toks, betas)]
+
+
+def pack_verdict_batch_v2(fmt, items, n_slots: int) -> bytes:
+    v1 = BitWriter()
+    fmt.write_verdict_batch_body(v1, items, n_slots)
+    return _flagged(*_choose_body(_encode_verdict_batch(fmt, items,
+                                                        n_slots), v1))
+
+
+def unpack_verdict_batch_v2(fmt, data: bytes, n_slots: int):
+    r = BitReader(data)
+    if int(r.read(1)[0]):
+        return fmt.read_verdict_batch_body(r, n_slots)
+    return _decode_verdict_batch(fmt, r, n_slots)
+
+
+def coded_verdict_batch_bits(fmt, items, n_slots: int) -> int:
+    """Actual bits of the v2 frame (before byte padding), by the same
+    selection rule pack_verdict_batch_v2 applies."""
+    v1 = BitWriter()
+    fmt.write_verdict_batch_body(v1, items, n_slots)
+    _, body = _choose_body(_encode_verdict_batch(fmt, items, n_slots), v1)
+    return 1 + body.n_bits

@@ -981,6 +981,25 @@ class EdgeCloudEngine:
         return self.fmt.unpack_verdict(data,
                                        codec=self.edge.slot_codec[slot])
 
+    # -- verdict BATCHING (one coded downlink frame per cell).  A frame
+    #    serves many requests at once, so its codec is the LINK's
+    #    negotiated version (EngineConfig.wire_codec), never a
+    #    per-request override — both actors resolve it identically from
+    #    static config, so nothing version-related rides the wire.
+    def pack_verdict_batch(self, verdicts: Dict[int,
+                                                wire_mod.VerdictPayload]
+                           ) -> bytes:
+        """Cloud side: coalesce one cell's verdicts (ascending slot
+        order — the deterministic frame order both ends rely on) into
+        one downlink frame."""
+        items = sorted(verdicts.items())
+        return self.fmt.pack_verdict_batch(items, self.B)
+
+    def unpack_verdict_batch(self, data: bytes):
+        """Edge side: decode a cell's frame back to ascending-slot
+        (slot, VerdictPayload) pairs."""
+        return self.fmt.unpack_verdict_batch(data, self.B)
+
     def apply_verdict_slot(self, slot: int,
                            verdict: wire_mod.VerdictPayload,
                            rec: PendingRound,
@@ -996,12 +1015,20 @@ class EdgeCloudEngine:
         return emitted
 
     # ------------------------------------------------------------------
-    def run_round(self):
+    def run_round(self, verdict_groups: Optional[List[List[int]]] = None):
         """One lockstep SD batch over the ACTIVE rows, through the wire.
         Returns a metrics dict (host values).  Inactive slots still flow
         through the compute (static shapes) but are masked out of
         budgets, rollback depth, state advancement and every reported
-        statistic."""
+        statistic.
+
+        ``verdict_groups`` (multi-cell serving with verdict batching):
+        lists of slots sharing a downlink — the cloud coalesces each
+        group's verdicts into ONE coded frame, and the edge applies the
+        FRAME-decoded verdicts, so the bytes the serving clock charges
+        are exactly the bytes the edge consumed.  The per-slot packed
+        sizes are still reported (``verdict_bits_row``) as the unbatched
+        reference the cell study compares against."""
         L = self.e.L_max
         active = np.asarray(self.active, bool)
         n_active = max(int(active.sum()), 1)
@@ -1029,8 +1056,26 @@ class EdgeCloudEngine:
         verdict_bits_row = np.zeros((self.B,), np.float64)
         for slot, data in verdict_packed.items():
             verdict_bits_row[slot] = wire_mod.packed_bits(data)
-        verdicts = {s: self.unpack_verdict_slot(s, b)
-                    for s, b in verdict_packed.items()}
+        verdict_frames = []
+        if verdict_groups is None:
+            verdicts = {s: self.unpack_verdict_slot(s, b)
+                        for s, b in verdict_packed.items()}
+        else:
+            # one coded frame per group; the edge decodes the frame —
+            # round-trips are exact, so streams match the unbatched path
+            verdicts = {}
+            grouped = [s for g in verdict_groups for s in g]
+            assert sorted(grouped) == sorted(vb.verdicts), \
+                "verdict_groups must cover exactly the active slots"
+            for group in verdict_groups:
+                items = {s: vb.verdicts[s] for s in group}
+                if not items:
+                    continue
+                frame = self.pack_verdict_batch(items)
+                verdicts.update(dict(self.unpack_verdict_batch(frame)))
+                verdict_frames.append(
+                    {"slots": sorted(items),
+                     "bits": wire_mod.packed_bits(frame)})
         emitted = self.edge.apply_verdicts_batch(active, verdicts, db)
         for b in range(self.B):
             self.out_tokens[b].extend(emitted[b])
@@ -1065,6 +1110,7 @@ class EdgeCloudEngine:
             "wire_bits": wire_bits,
             "wire_bits_row": wire_bits_row,
             "verdict_bits_row": verdict_bits_row,
+            "verdict_frames": verdict_frames,
             "active": active.copy(),
             "emitted": emitted,
             "K_mean": float((db.Ks * live_np).sum()

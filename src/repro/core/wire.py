@@ -23,6 +23,20 @@ Downlink message (one per request per SD round), ``VerdictPayload``:
   * the accepted-prefix length T, the resampled/bonus token, and the
     backtracked β_{T} the edge must resume from.
 
+Downlink FRAME (verdict batching, one per cell per verify batch): the
+cloud coalesces every verdict destined for the same radio cell into one
+``pack_verdict_batch`` frame — a verdict count, the destination slot
+ids, and the verdict bodies — so the cell's shared broadcast downlink
+pays ONE per-message framing overhead per verify batch instead of one
+per verdict.  The frame codec is negotiated per LINK exactly like the
+draft codec (``WireFormat.codec`` / a ``codec=`` override): v1 packs
+fixed-width bodies, v2 (``core.coding``) replaces the per-verdict Rice
+codes with one range-coded run over the accept-length residues (an
+adaptive model shared across the frame, amortising its learning the
+same way the frame amortises framing).  Per-REQUEST codec overrides do
+not apply to a shared frame — it is a link-level object serving many
+requests at once.
+
 Wire format v1 (fixed-width fields, MSB first, byte-padded at the end):
 
     draft   := n:⌈log2(L+1)⌉ tokens:n×⌈log2 V⌉
@@ -273,6 +287,57 @@ class WireFormat:
             n_accept=int(r.read(self.n_field)[0]),
             new_token=int(r.read(self.tok_field)[0]),
             beta_next=float(r.read_f32(1)[0]))
+
+    # -- verdict batch (one coded downlink frame per cell) --------------
+    MAX_BATCH_VERDICTS = 255     # count field is one byte
+
+    def slot_field(self, n_slots: int) -> int:
+        return field_width(max(n_slots - 1, 1))
+
+    def _check_batch(self, items, n_slots: int):
+        assert 1 <= len(items) <= self.MAX_BATCH_VERDICTS, len(items)
+        slots = [s for s, _ in items]
+        assert slots == sorted(slots) and len(set(slots)) == len(slots), \
+            "verdict frames are packed in ascending slot order"
+        assert all(0 <= s < n_slots for s in slots), (slots, n_slots)
+
+    def write_verdict_batch_body(self, w: BitWriter, items, n_slots: int):
+        """The v1 fixed-width frame body (also codec v2's fallback):
+        count, destination slots, then the per-verdict bodies.  ``items``
+        is an ascending-slot list of (slot, VerdictPayload)."""
+        self._check_batch(items, n_slots)
+        w.write([len(items)], 8)
+        sf = self.slot_field(n_slots)
+        w.write([s for s, _ in items], sf)
+        for _, v in items:
+            self.write_verdict_body(w, v)
+
+    def read_verdict_batch_body(self, r: BitReader, n_slots: int):
+        m = int(r.read(8)[0])
+        sf = self.slot_field(n_slots)
+        slots = [int(s) for s in r.read(sf, m)]
+        return [(s, self.read_verdict_body(r)) for s in slots]
+
+    def pack_verdict_batch(self, items, n_slots: int,
+                           codec: Optional[str] = None) -> bytes:
+        """One downlink frame carrying every verdict of one cell for one
+        verify batch.  ``items``: ascending-slot (slot, VerdictPayload)
+        pairs; ``n_slots`` fixes the slot-id field width (both ends know
+        the engine's slot count)."""
+        items = sorted(items)
+        if self._codec(codec) == "v2":
+            from repro.core import coding
+            return coding.pack_verdict_batch_v2(self, items, n_slots)
+        w = BitWriter()
+        self.write_verdict_batch_body(w, items, n_slots)
+        return w.getvalue()
+
+    def unpack_verdict_batch(self, data: bytes, n_slots: int,
+                             codec: Optional[str] = None):
+        if self._codec(codec) == "v2":
+            from repro.core import coding
+            return coding.unpack_verdict_batch_v2(self, data, n_slots)
+        return self.read_verdict_batch_body(BitReader(data), n_slots)
 
 
 # ----------------------------------------------------------------------

@@ -75,6 +75,10 @@ def main():
                          "coded-size ratio (tracks what the codec "
                          "actually ships)")
     ap.add_argument("--uplink-bps", type=float, default=1e6)
+    ap.add_argument("--downlink-mbps", type=float, default=20.0,
+                    help="per-cell broadcast downlink rate (Mbit/s); "
+                         "at <= 1 the verdict broadcast, not the "
+                         "uplink, bottlenecks the round")
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -104,6 +108,16 @@ def main():
     ap.add_argument("--no-speculate", action="store_true",
                     help="pipelined: disable the edge's optimistic "
                          "draft-ahead of round t+1")
+    ap.add_argument("--cells", type=int, default=1,
+                    help="trace mode: radio cells — each gets its own "
+                         "shared uplink + broadcast downlink and its "
+                         "own slot partition/scheduler; one cloud "
+                         "verifier batches across cells")
+    ap.add_argument("--verdict-batch", action="store_true",
+                    help="trace mode: coalesce each cell's verdicts "
+                         "into one coded downlink frame per verify "
+                         "batch (amortises per-message framing in "
+                         "downlink-limited regimes)")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-slot cache capacity (0 = auto)")
     ap.add_argument("--page-size", type=int, default=0,
@@ -129,7 +143,8 @@ def main():
                      temperature=args.temperature,
                      wire_codec=args.wire_codec,
                      budget_model=args.budget_model),
-        ChannelConfig(uplink_bps=args.uplink_bps),
+        ChannelConfig(uplink_bps=args.uplink_bps,
+                      downlink_bps=args.downlink_mbps * 1e6),
         seed=args.seed)
 
     if args.trace:
@@ -140,21 +155,25 @@ def main():
             prompt_len=args.prompt_len,
             min_new_tokens=args.min_new_tokens,
             max_new_tokens=args.max_new_tokens,
-            vocab=tc.vocab, seed=args.seed))
+            vocab=tc.vocab, seed=args.seed, cells=args.cells))
         sess = ServeSession(eng, ServeConfig(
             max_batch=args.max_batch, queue_cap=args.queue_cap,
             policy=args.policy, cache_len=cache_len,
             page_size=args.page_size,
             n_pages=args.n_pages or None,
             pipeline=args.pipeline,
-            speculate=not args.no_speculate))
+            speculate=not args.no_speculate,
+            n_cells=args.cells,
+            verdict_batch=args.verdict_batch))
         rep = sess.run_trace(trace)
         kv = (f"paged({args.page_size}-tok pages)" if args.page_size
               else "dense")
         print(f"[serve --trace] {tc.name} <- {dc.name}  "
               f"method={args.method} policy={args.policy} "
               f"pipeline={args.pipeline} codec={args.wire_codec} "
-              f"rate={args.rate}/s slots={args.max_batch} kv={kv}")
+              f"rate={args.rate}/s slots={args.max_batch} kv={kv} "
+              f"cells={args.cells} "
+              f"verdict_batch={args.verdict_batch}")
         for k, v in rep.summary().items():
             if isinstance(v, float):
                 print(f"  {k:24s} {v:.6g}")

@@ -2,19 +2,23 @@
 
     Request / RequestState     — request lifecycle (serve.request)
     Scheduler, SchedulerConfig — admission/eviction, slot packing
-    ServeSession, ServeConfig  — serving loop, contended-uplink clock
-    EventDrivenLoop            — pipelined schedule (serve.events)
+    Cell, CellTopology         — multi-cell topology (serve.cells):
+                                 per-cell uplink/downlink/scheduler,
+                                 one cloud verifier
+    ServeSession, ServeConfig  — serving loop, contended-link clock
+    EventDrivenLoop, EventQueue— pipelined schedule (serve.events)
     ServeReport                — throughput / latency-percentile report
-    TraceConfig, poisson_trace — seeded Poisson arrival workloads
+    TraceConfig, poisson_trace — seeded per-cell Poisson workloads
 """
-from repro.serve.events import EventDrivenLoop
+from repro.serve.cells import Cell, CellTopology
+from repro.serve.events import EventDrivenLoop, EventQueue
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Scheduler, SchedulerConfig
 from repro.serve.session import ServeConfig, ServeReport, ServeSession
 from repro.serve.trace import TraceConfig, poisson_trace
 
 __all__ = [
-    "EventDrivenLoop", "Request", "RequestState", "Scheduler",
-    "SchedulerConfig", "ServeConfig", "ServeReport", "ServeSession",
-    "TraceConfig", "poisson_trace",
+    "Cell", "CellTopology", "EventDrivenLoop", "EventQueue", "Request",
+    "RequestState", "Scheduler", "SchedulerConfig", "ServeConfig",
+    "ServeReport", "ServeSession", "TraceConfig", "poisson_trace",
 ]

@@ -42,6 +42,15 @@ and must serve lockstep.  Paged serving is supported with a WORST-CASE
 admission gate (pages for prompt + max_new + draft window reserved up
 front), so mid-flight preemption — which would tangle with in-flight
 verdicts — never triggers.
+
+Multi-cell topology: each request's payload rides ITS cell's shared
+uplink and its verdict returns on ITS cell's broadcast downlink
+(serve.cells.CellTopology); the cloud stays one server batching every
+arrived payload across cells.  With verdict batching the cloud
+coalesces each verify batch's verdicts into one coded frame per cell
+(engine.pack_verdict_batch) — the frame serialises once on the cell's
+downlink and its verdicts are applied in ascending slot order on
+arrival, which is the same deterministic order the lockstep loop uses.
 """
 from __future__ import annotations
 
@@ -50,7 +59,6 @@ import heapq
 import itertools
 from typing import Dict, List, Optional
 
-from repro.core import channel as channel_mod
 from repro.core.engine import PendingRound, SpecDraft
 from repro.serve.request import Request
 
@@ -59,6 +67,32 @@ EDGE_DONE = "edge_done"
 UPLINK_ARRIVE = "uplink_arrive"
 VERIFY_DONE = "verify_done"
 DOWNLINK_ARRIVE = "downlink_arrive"
+
+
+class EventQueue:
+    """Deterministic min-heap of (time, seq, kind, data) events.
+
+    ``seq`` is a monotone insertion counter, which pins two properties
+    the replayable-serving tests depend on: (1) same-timestamp events
+    pop in PUSH order — the tie-break is explicit, not an accident of
+    heap layout; (2) ``kind``/``data`` are NEVER compared, so payloads
+    may be dicts, dataclasses, bytes or anything else unorderable
+    without ever raising from inside heapq."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, t: float, kind: str, data=None):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    def pop(self):
+        """(t, kind, data) of the earliest event (FIFO within ties)."""
+        t, _, kind, data = heapq.heappop(self._heap)
+        return t, kind, data
+
+    def __len__(self) -> int:
+        return len(self._heap)
 
 
 @dataclasses.dataclass
@@ -79,15 +113,13 @@ class EventDrivenLoop:
         self.sess = sess
         self.eng = sess.engine
         self.sched = sess.sched
-        self.uplink = sess.uplink
-        self.ch = self.eng.ch
+        self.topo = sess.topo
         self.cfg = sess.cfg
         assert not (self.eng.edge.stateful or self.eng.cloud.stateful), \
             "pipelined serving requires attention-only draft/target " \
             "models (sequential-state rollback is lockstep-only)"
         self.now = 0.0
-        self._heap: list = []
-        self._seq = itertools.count()
+        self._queue = EventQueue()
         self.cloud_busy_until = 0.0
         self.cloud_queue: List[int] = []
         self.slots: Dict[int, _SlotCtx] = {}
@@ -108,7 +140,7 @@ class EventDrivenLoop:
             else measured
 
     def _push(self, t: float, kind: str, data=None):
-        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+        self._queue.push(t, kind, data)
 
     # -- main loop ------------------------------------------------------
     def run(self, trace: List[Request]) -> int:
@@ -124,8 +156,8 @@ class EventDrivenLoop:
             DOWNLINK_ARRIVE: self._on_downlink_arrive,
         }
         budget = self.cfg.max_rounds * max(self.cfg.max_batch, 1)
-        while self._heap:
-            t, _, kind, data = heapq.heappop(self._heap)
+        while self._queue:
+            t, kind, data = self._queue.pop()
             self.now = max(self.now, t)
             handlers[kind](data)
             self.sched.check_invariants()
@@ -184,7 +216,8 @@ class EventDrivenLoop:
         slot, rec = data
         ctx = self.slots[slot]
         ctx.rec = rec
-        tx = self.uplink.transmit(self.now, rec.wire_bits)
+        tx = self.topo.cell_of_slot(slot).uplink.transmit(
+            self.now, rec.wire_bits)
         ctx.req.uplink_wait_s += tx.wait_s
         self._push(tx.arrive_s, UPLINK_ARRIVE, slot)
         # the edge device is idle until the verdict returns: draft ahead
@@ -218,20 +251,45 @@ class EventDrivenLoop:
 
     def _on_verify_done(self, data):
         batch, vb = data
-        for slot in batch:
-            # per-slot negotiated codec (wire codec v2 entropy-codes the
-            # verdict); the edge decodes with the same negotiation
-            data_v = self.eng.pack_verdict_slot(slot, vb.verdicts[slot])
-            t_down = channel_mod.downlink_time(self.ch,
-                                               len(data_v) * 8)
-            self._push(self.now + t_down, DOWNLINK_ARRIVE,
-                       (slot, self.eng.unpack_verdict_slot(slot, data_v)))
+        # each cell's verdicts serialise FIFO on ITS broadcast downlink
+        # (cells in id order, slots ascending within a cell — the same
+        # deterministic order the lockstep loop charges)
+        for cell, slots in self.topo.slot_groups(batch):
+            if self.cfg.verdict_batch:
+                # ONE coded frame per cell per verify batch; its
+                # verdicts travel (and later apply) together
+                frame = self.eng.pack_verdict_batch(
+                    {s: vb.verdicts[s] for s in slots})
+                tx = cell.downlink.transmit(self.now, len(frame) * 8)
+                self._push(tx.arrive_s, DOWNLINK_ARRIVE,
+                           ("frame", frame))
+            else:
+                for slot in slots:
+                    # per-slot negotiated codec (wire codec v2 entropy-
+                    # codes the verdict); the edge decodes with the same
+                    # negotiation
+                    data_v = self.eng.pack_verdict_slot(
+                        slot, vb.verdicts[slot])
+                    tx = cell.downlink.transmit(self.now,
+                                                len(data_v) * 8)
+                    self._push(tx.arrive_s, DOWNLINK_ARRIVE,
+                               ("verdict", (slot, data_v)))
         if self.cloud_queue:                 # work queued while busy
             self._start_verify()
 
     # -- verdict application --------------------------------------------
     def _on_downlink_arrive(self, data):
-        slot, verdict = data
+        kind, payload = data
+        if kind == "frame":
+            # ascending slot order — the frame's packed order
+            for slot, verdict in self.eng.unpack_verdict_batch(payload):
+                self._apply_verdict(slot, verdict)
+        else:
+            slot, data_v = payload
+            self._apply_verdict(
+                slot, self.eng.unpack_verdict_slot(slot, data_v))
+
+    def _apply_verdict(self, slot: int, verdict):
         ctx = self.slots[slot]
         rec, ctx.rec = ctx.rec, None
         spec, ctx.spec = ctx.spec, None

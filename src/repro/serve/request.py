@@ -32,6 +32,9 @@ class Request:
     seed: int = 0                      # per-request RNG root (engine.row_key)
     wire_codec: Optional[str] = None   # per-request codec version override
                                        # (None: the link's negotiated default)
+    cell: int = 0                      # radio cell the edge device sits in
+                                       # (topology maps it mod n_cells, so a
+                                       # trace replays under ANY cell count)
 
     # -- runtime state (owned by the scheduler/session) ----------------
     state: RequestState = RequestState.QUEUED

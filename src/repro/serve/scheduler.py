@@ -51,9 +51,20 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig):
+    def __init__(self, cfg: SchedulerConfig,
+                 slot_ids: Optional[List[int]] = None):
+        """``slot_ids`` (multi-cell serving): the GLOBAL engine slots
+        this scheduler owns — a cell's scheduler manages its partition
+        of the engine's slot space and every Request.slot it assigns is
+        a global id.  Default: slots 0..max_batch−1 (the single-cell
+        identity mapping, unchanged behavior)."""
         assert cfg.policy in ("continuous", "static"), cfg.policy
         self.cfg = cfg
+        self.slot_ids = (list(slot_ids) if slot_ids is not None
+                         else list(range(cfg.max_batch)))
+        assert len(self.slot_ids) == cfg.max_batch
+        assert len(set(self.slot_ids)) == cfg.max_batch
+        self._local = {g: i for i, g in enumerate(self.slot_ids)}
         self.waiting: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * cfg.max_batch
         self.finished: List[Request] = []
@@ -67,7 +78,9 @@ class Scheduler:
 
     @property
     def free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slots) if r is None]
+        """Free GLOBAL slot ids, in this scheduler's fixed slot order."""
+        return [self.slot_ids[i] for i, r in enumerate(self.slots)
+                if r is None]
 
     @property
     def active_requests(self) -> List[Request]:
@@ -114,14 +127,23 @@ class Scheduler:
             req.state = RequestState.ACTIVE
             req.slot = slot
             req.t_admit = now
-            self.slots[slot] = req
+            self.slots[self._local[slot]] = req
             admissions.append((slot, req))
         return admissions
 
     def pick_preemption_victim(self) -> Request:
         """LIFO victim selection for page-pool exhaustion: the most
         recently admitted active request has the least sunk work (and
-        its deterministic RNG re-emits the same tokens on the re-run)."""
+        its deterministic RNG re-emits the same tokens on the re-run).
+
+        The order is FULLY deterministic, which is what makes preemption
+        replayable: victims sort by (t_admit, global slot id) and the
+        MAXIMUM wins — a t_admit tie (several admissions in one
+        scheduling tick) falls to the HIGHEST global slot, i.e. the last
+        slot filled that tick.  ``CellTopology`` extends the same key
+        across cells: global slot ids are unique engine-wide, so the
+        cross-cell victim order is pinned too (tested by
+        test_fuzz_serve.py)."""
         active = self.active_requests
         assert active, "no active request to preempt"
         return max(active, key=lambda r: (r.t_admit, r.slot))
@@ -132,9 +154,9 @@ class Scheduler:
         the re-run reproduce them) and re-queues at the FRONT of the
         waiting room.  Returns the freed slot id for the engine side."""
         assert req.state == RequestState.ACTIVE and req.slot is not None
-        assert self.slots[req.slot] is req
+        assert self.slots[self._local[req.slot]] is req
         slot = req.slot
-        self.slots[slot] = None
+        self.slots[self._local[slot]] = None
         req.state = RequestState.QUEUED
         req.slot = None
         req.tokens = []
@@ -148,9 +170,9 @@ class Scheduler:
         """Eviction on completion: frees the slot.  Returns the slot id
         so the session can release the engine side."""
         assert req.state == RequestState.ACTIVE and req.slot is not None
-        assert self.slots[req.slot] is req
+        assert self.slots[self._local[req.slot]] is req
         slot = req.slot
-        self.slots[slot] = None
+        self.slots[self._local[slot]] = None
         req.state = RequestState.FINISHED
         req.t_finish = now
         self.finished.append(req)
@@ -163,11 +185,11 @@ class Scheduler:
         # without re-passing admission control
         assert len(self.waiting) <= self.cfg.queue_cap + self.cfg.max_batch
         seen = set()
-        for slot, req in enumerate(self.slots):
+        for gslot, req in zip(self.slot_ids, self.slots):
             if req is None:
                 continue
             assert req.state == RequestState.ACTIVE
-            assert req.slot == slot, (req.rid, req.slot, slot)
+            assert req.slot == gslot, (req.rid, req.slot, gslot)
             assert req.rid not in seen
             seen.add(req.rid)
         for req in self.waiting:

@@ -36,6 +36,21 @@ iteration:
 When no request is active the clock jumps to the next arrival (the
 server idles).  The loop ends when the trace is drained.
 
+Multi-cell topology (``n_cells > 1``): the engine's slots are
+partitioned among radio cells (serve.cells.CellTopology) — each cell
+has its OWN SharedUplink, its own broadcast SharedDownlink, and its own
+admission/preemption scheduler, while ONE cloud verify engine batches
+verify calls across every cell.  Per round, each cell's live payloads
+serialise FIFO on that cell's uplink (cells transmit in parallel), the
+barrier is the slowest cell's last arrival, and the verdicts return on
+each cell's downlink — per-verdict (each paying the per-message framing
+overhead) or, with ``verdict_batch=True``, coalesced into ONE coded
+frame per cell per round (wire.pack_verdict_batch, codec negotiated
+per link like the draft codec).  Cells move bytes and clocks only:
+per-request token streams are bit-identical to the single-cell
+reference for every topology × schedule × codec combination
+(tests/test_fuzz_serve.py sweeps exactly this).
+
 Paged KV serving (``page_size > 0``): the engine's caches become a
 shared page pool (core.pages.PageAllocator) and admission is gated by
 FREE PAGES, not free slots — ``max_batch`` can exceed what dense
@@ -53,10 +68,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import channel as channel_mod
 from repro.core.engine import EdgeCloudEngine
-from repro.serve.request import Request, RequestState
-from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.cells import CellTopology
+from repro.serve.request import Request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +86,14 @@ class ServeConfig:
     # bit for bit, different clock.
     pipeline: str = "lockstep"      # lockstep | pipelined
     speculate: bool = True          # pipelined: optimistic continuation
+    # Cell topology: n_cells radio cells partition the engine's slots,
+    # each behind its own shared uplink + broadcast downlink, all
+    # feeding the one cloud verifier.  verdict_batch coalesces each
+    # cell's verdicts into one coded downlink frame per verify batch
+    # (amortising per-message framing — the lever in downlink-limited
+    # regimes); off, every verdict is its own framed downlink message.
+    n_cells: int = 1
+    verdict_batch: bool = False
     # Paged KV pool: page_size > 0 switches eligible attention layers to
     # a shared page pool; admission is then by free pages.  n_pages None
     # defaults to max_batch * ceil(cache_len / page_size) (the dense
@@ -113,11 +135,25 @@ class ServeReport:
     page_size: int = 0
     n_pages: int = 0
     peak_pages_in_use: int = 0
-    # schedule + wire metrics (this PR's pipelined serving)
+    # schedule + wire metrics (pipelined serving)
     pipeline: str = "lockstep"
     latency_mean_s: float = float("nan")
     n_spec_hits: int = 0
     n_spec_misses: int = 0
+    # cell topology + downlink metrics (multi-cell serving).  Utilization
+    # aggregates are means over cells (a cell with no traffic reports
+    # 0.0, never NaN); bits totals include per-message framing, so
+    # verdict batching shows up as a strict reduction.
+    n_cells: int = 1
+    verdict_batch: bool = False
+    downlink_utilization: float = 0.0
+    downlink_bits_total: float = 0.0
+    downlink_msgs: int = 0
+    uplink_bits_total: float = 0.0
+    cell_uplink_utilization: List[float] = dataclasses.field(
+        default_factory=list)
+    cell_downlink_utilization: List[float] = dataclasses.field(
+        default_factory=list)
     requests: List[Request] = dataclasses.field(default_factory=list,
                                                 repr=False)
 
@@ -140,10 +176,11 @@ class ServeSession:
         self.cfg = cfg
         self.n_spec_hits = 0
         self.n_spec_misses = 0
-        self.sched = Scheduler(SchedulerConfig(
-            max_batch=cfg.max_batch, queue_cap=cfg.queue_cap,
-            policy=cfg.policy))
-        self.uplink = channel_mod.SharedUplink(engine.ch)
+        # the topology IS the scheduler: one cell degenerates to the
+        # classic single-scheduler single-uplink serving layer
+        self.topo = CellTopology(cfg.n_cells, cfg.max_batch,
+                                 cfg.queue_cap, cfg.policy, engine.ch)
+        self.sched = self.topo
         self.now = 0.0
         self.n_rounds = 0
         self.peak_active = 0
@@ -231,33 +268,51 @@ class ServeSession:
         if self.paged:
             self._grow_or_preempt()
         self.peak_active = max(self.peak_active, sched.n_active)
-        m = eng.run_round()
+        groups = self.topo.slot_groups(
+            r.slot for r in sched.active_requests)
+        m = eng.run_round(
+            verdict_groups=[slots for _, slots in groups]
+            if self.cfg.verdict_batch else None)
         self.n_rounds += 1
 
-        # --- clock: parallel edge drafting, contended uplink, batched
-        # cloud verify, downlink feedback broadcast ---
+        # --- clock: parallel edge drafting, per-cell contended uplinks,
+        # batched cloud verify, per-cell downlink feedback ---
         t_slm = self.cfg.t_slm_s if self.cfg.t_slm_s is not None \
             else m["t_slm"]
         t_llm = self.cfg.t_llm_s if self.cfg.t_llm_s is not None \
             else m["t_llm"]
         edge_done = self.now + t_slm
         arrive = edge_done
-        for req in sched.active_requests:
+        by_slot = {r.slot: r for r in sched.active_requests}
+        for cell, slots in groups:
+            # cells transmit in PARALLEL; payloads within a cell
+            # serialise FIFO on its shared uplink in slot order.
             # wire_bits_row is len(pack(DraftPayload)) * 8 — the ACTUAL
             # bytes the edge serialises, not the analytic budget the
             # edge used to choose L^t (bits_row, kept for reporting)
-            payload = float(m["wire_bits_row"][req.slot])
-            tx = self.uplink.transmit(edge_done, payload)
-            req.uplink_wait_s += tx.wait_s
-            arrive = max(arrive, tx.arrive_s)
-        # downlink feedback: the packed VerdictPayload broadcast (the
-        # slowest verdict gates the lockstep barrier)
-        vbits = [float(m["verdict_bits_row"][req.slot])
-                 for req in sched.active_requests]
-        t_down = channel_mod.downlink_time(
-            eng.ch, max(vbits) if vbits
-            else channel_mod.feedback_bits(eng.e.L_max, eng.V))
-        self.now = arrive + t_llm + t_down
+            for slot in slots:
+                tx = cell.uplink.transmit(
+                    edge_done, float(m["wire_bits_row"][slot]))
+                by_slot[slot].uplink_wait_s += tx.wait_s
+                arrive = max(arrive, tx.arrive_s)
+        # downlink feedback: each cell's verdicts serialise FIFO on its
+        # shared broadcast downlink — per-verdict messages, or ONE coded
+        # frame per cell when verdict batching is on.  The lockstep
+        # barrier is the last verdict's arrival across all cells.
+        verify_done = arrive + t_llm
+        self.now = verify_done
+        frames = {tuple(f["slots"]): f["bits"]
+                  for f in m["verdict_frames"]}
+        for cell, slots in groups:
+            if self.cfg.verdict_batch:
+                tx = cell.downlink.transmit(verify_done,
+                                            frames[tuple(slots)])
+                self.now = max(self.now, tx.arrive_s)
+            else:
+                for slot in slots:
+                    tx = cell.downlink.transmit(
+                        verify_done, float(m["verdict_bits_row"][slot]))
+                    self.now = max(self.now, tx.arrive_s)
 
         # --- token delivery + completion ---
         finished = []
@@ -307,6 +362,8 @@ class ServeSession:
         lats = [r.latency_s for r in fin]
         toks = sum(r.n_tokens for r in fin)
         mk = self.now
+        up_util = [c.uplink.utilization(mk) for c in self.topo.cells]
+        down_util = [c.downlink.utilization(mk) for c in self.topo.cells]
         return ServeReport(
             policy=self.cfg.policy,
             n_requests=n_total,
@@ -327,7 +384,7 @@ class ServeSession:
             uplink_wait_mean_s=float(np.mean([r.uplink_wait_s
                                               for r in fin]))
             if fin else float("nan"),
-            uplink_utilization=self.uplink.utilization(mk),
+            uplink_utilization=float(np.mean(up_util)),
             rejection_rate=len(self.sched.rejected) / max(n_total, 1),
             n_rounds=self.n_rounds,
             n_preempted=self.sched.n_preemptions,
@@ -340,5 +397,16 @@ class ServeSession:
             latency_mean_s=float(np.mean(lats)) if lats else float("nan"),
             n_spec_hits=self.n_spec_hits,
             n_spec_misses=self.n_spec_misses,
+            n_cells=self.cfg.n_cells,
+            verdict_batch=self.cfg.verdict_batch,
+            downlink_utilization=float(np.mean(down_util)),
+            downlink_bits_total=float(sum(c.downlink.bits_total
+                                          for c in self.topo.cells)),
+            downlink_msgs=sum(c.downlink.n_msgs
+                              for c in self.topo.cells),
+            uplink_bits_total=float(sum(c.uplink.bits_total
+                                        for c in self.topo.cells)),
+            cell_uplink_utilization=up_util,
+            cell_downlink_utilization=down_util,
             requests=self.sched.finished + self.sched.rejected,
         )
