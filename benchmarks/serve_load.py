@@ -41,13 +41,21 @@ costs — host timing noise must not decide a scheduler comparison):
             frame per cell per round instead of one framed message per
             verdict) must strictly cut downlink bits/round.
 
+  transport real two-process sockets (serve/net.py) vs the simulator
+            as differential oracle: the SAME seeded trace through a
+            threaded CloudServer must emit token streams bit-identical
+            to the modeled run in both pipeline modes, with MEASURED
+            wall-clock RPC/verify/draft latency reported next to the
+            simulator's modeled clock.
+
 Results go to experiments/bench/serve_load.csv and the perf-trajectory
 JSONs CI tracks: experiments/bench/BENCH_serve.json (throughput, p50/p95
 latency, peak pages, preemptions), experiments/bench/BENCH_pipeline.json
 (lockstep-vs-pipelined latency, spec hit rate), experiments/bench/
-BENCH_wire.json (v1-vs-v2 bits/round and latency, reference ratio) and
+BENCH_wire.json (v1-vs-v2 bits/round and latency, reference ratio),
 experiments/bench/BENCH_cells.json (per-topology downlink bits/round,
-batching ratio, makespans).
+batching ratio, makespans) and experiments/bench/BENCH_transport.json
+(measured vs modeled round latency, stream equality).
 
     PYTHONPATH=src python -m benchmarks.serve_load --smoke
     PYTHONPATH=src python -m benchmarks.serve_load            # trained pair
@@ -426,6 +434,75 @@ def cell_study(pair, n_requests, prompt_len, min_new, max_new, rate,
     return out
 
 
+def transport_study(n_requests, prompt_len, min_new, max_new, rate,
+                    method, ecfg, t_slm, t_llm, cache_len, n_cells=2,
+                    max_batch=4, arch="qwen2.5-3b", seed=0):
+    """Real sockets vs the discrete-event simulator as differential
+    oracle: the SAME seeded trace through an in-process threaded
+    ``CloudServer`` (one TCP connection per cell) must yield token
+    streams bit-identical to the simulator in BOTH pipeline modes —
+    the transport moves bytes and clocks, never tokens.  The tcp side
+    reports MEASURED wall-clock (VERIFY→VERDICTS round trips, the
+    server's verify time, edge draft time, makespan) next to the sim's
+    modeled clock.  Always runs the random-init smoke pair: the
+    handshake rebuilds models from (arch, seed) — parameters never
+    cross the wire — so a trained checkpoint pair has no two-process
+    equivalent."""
+    from repro.serve import CloudServer, EdgeClient
+
+    dc, dp, tc, tp = _smoke_pair(arch, seed)
+    trace_cfg = TraceConfig(
+        n_requests=n_requests, rate_rps=rate, prompt_len=prompt_len,
+        min_new_tokens=min_new, max_new_tokens=max_new, vocab=tc.vocab,
+        seed=23, cells=n_cells)
+    out = {"n_cells": n_cells, "max_batch": max_batch,
+           "n_requests": n_requests, "arch": arch, "modes": {}}
+    server = CloudServer().start()
+    ok = True
+    try:
+        for pipeline in ("lockstep", "pipelined"):
+            # lockstep also exercises the coalesced verdict frames
+            cfg_kw = dict(max_batch=max_batch, cache_len=cache_len,
+                          pipeline=pipeline, n_cells=n_cells,
+                          verdict_batch=(pipeline == "lockstep"))
+            eng = EdgeCloudEngine(dc, dp, tc, tp, method, ecfg,
+                                  ChannelConfig(), seed=seed)
+            sim = ServeSession(eng, ServeConfig(
+                t_slm_s=t_slm, t_llm_s=t_llm, **cfg_kw)).run_trace(
+                poisson_trace(trace_cfg))
+            sim_streams = {r.rid: tuple(r.tokens) for r in sim.requests}
+            client = EdgeClient(dc, dp, method, ecfg,
+                                ServeConfig(**cfg_kw), arch=arch,
+                                smoke=True, host=server.host,
+                                port=server.port, seed=seed,
+                                session_id=f"bench-{pipeline}")
+            with client:
+                rep = client.run_trace(poisson_trace(trace_cfg))
+            identical = rep.streams() == sim_streams
+            ok &= identical
+            out["modes"][pipeline] = {
+                "streams_identical": identical,
+                "sim_modeled": {
+                    "makespan_s": sim.makespan_s,
+                    "latency_mean_s": sim.latency_mean_s,
+                    "n_rounds": sim.n_rounds,
+                },
+                "tcp_measured": {
+                    "makespan_s": rep.makespan_s,
+                    "n_verify_rpcs": rep.n_verify_rpcs,
+                    "rpc_round_s": rep.rpc_round_s,
+                    "t_llm_s": rep.t_llm_s,
+                    "t_slm_s": rep.t_slm_s,
+                    "n_finished": rep.n_finished,
+                    "n_spec_hits": rep.n_spec_hits,
+                },
+            }
+    finally:
+        server.stop()
+    out["verdict"] = {"streams_identical": ok, "ok": ok}
+    return out
+
+
 def run(smoke: bool = False):
     if smoke:
         pair = _smoke_pair()
@@ -470,6 +547,11 @@ def run(smoke: bool = False):
                        max_new=max_new, rate=max(rates), method=method,
                        ecfg=ecfg, t_slm=t_slm, t_llm=t_llm,
                        cache_len=cache_len)
+    transport = transport_study(
+        n_requests=8 if smoke else 10, prompt_len=prompt_len,
+        min_new=min_new, max_new=min(max_new, 16), rate=max(rates),
+        method=method, ecfg=ecfg, t_slm=t_slm, t_llm=t_llm,
+        cache_len=cache_len)
     path = common.emit_csv("serve_load", rows, KEYS)
     jpath = os.path.join(os.path.dirname(path), "BENCH_serve.json")
     with open(jpath, "w") as f:
@@ -492,8 +574,13 @@ def run(smoke: bool = False):
         json.dump({"schema": "BENCH_cells/v1", "smoke": smoke,
                    "t_slm_s": t_slm, "t_llm_s": t_llm,
                    "cell_study": cells}, f, indent=2)
-    return rows, paged, pipe, wire, cells, path, jpath, ppath, wpath, \
-        cpath
+    tpath = os.path.join(os.path.dirname(path), "BENCH_transport.json")
+    with open(tpath, "w") as f:
+        json.dump({"schema": "BENCH_transport/v1", "smoke": smoke,
+                   "t_slm_s": t_slm, "t_llm_s": t_llm,
+                   "transport_study": transport}, f, indent=2)
+    return rows, paged, pipe, wire, cells, transport, path, jpath, \
+        ppath, wpath, cpath, tpath
 
 
 def main():
@@ -501,8 +588,8 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="random-init smoke pair, reduced grid")
     args = ap.parse_args()
-    rows, paged, pipe, wire, cells, path, jpath, ppath, wpath, cpath = \
-        run(smoke=args.smoke)
+    (rows, paged, pipe, wire, cells, transport, path, jpath, ppath,
+     wpath, cpath, tpath) = run(smoke=args.smoke)
     for r in rows:
         print(f"{r['policy']:10s} rate={r['rate_rps']:5.1f}/s "
               f"tok/s={r['throughput_tok_s']:7.2f} "
@@ -585,11 +672,29 @@ def main():
     print(f"[{'PASS' if cv['ok'] else 'FAIL'}-CELLS] batched/per-verdict"
           f" downlink bits/round = [{ratios}] (identical streams: "
           f"{cv['streams_identical']})")
+    # headline 6: real sockets vs the simulator — the SAME seeded trace
+    # through a threaded CloudServer must emit bit-identical streams in
+    # both pipeline modes, with measured wall-clock reported next to
+    # the sim's modeled clock
+    tv = transport["verdict"]
+    for mode, row in transport["modes"].items():
+        rpc = row["tcp_measured"]["rpc_round_s"]
+        print(f"transport  {mode:9s} cells={transport['n_cells']}: "
+              f"rpc mean={rpc['mean']*1e3:.1f}ms "
+              f"p95={rpc['p95']*1e3:.1f}ms "
+              f"({row['tcp_measured']['n_verify_rpcs']} RPCs), makespan "
+              f"sim {row['sim_modeled']['makespan_s']:.3f}s (modeled) / "
+              f"tcp {row['tcp_measured']['makespan_s']:.3f}s (measured), "
+              f"identical={row['streams_identical']}")
+    print(f"[{'PASS' if tv['ok'] else 'FAIL'}-TRANSPORT] tcp == sim "
+          f"token streams over real sockets (lockstep & pipelined: "
+          f"{tv['streams_identical']})")
     print("->", path)
     print("->", jpath)
     print("->", ppath)
     print("->", wpath)
     print("->", cpath)
+    print("->", tpath)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,16 @@
 from repro.core.slq import lattice_quantize, slq_distortion_bound, tv_distance
 from repro.core.sqs import (SQSResult, softmax_temp, sparsify_topk,
                             sparsify_threshold, dense_qs, no_compression)
-from repro.core import bits, channel, conformal, theory, wire
+from repro.core import bits, channel, conformal, theory, transport, wire
 from repro.core.verify import verify as sd_verify
 from repro.core.verify import acceptance_prob, VerifyResult
 from repro.core.engine import (CloudVerifyEngine, EdgeCloudEngine,
-                               EdgeDraftEngine, MethodConfig, EngineConfig,
+                               EdgeDraftEngine, EdgeEngineBase,
+                               MethodConfig, EngineConfig,
                                PendingRound, SpecDraft, cloud_row_key,
                                rollback_cache, row_key, summarize)
 from repro.core.channel import ChannelConfig, SharedUplink
 from repro.core.pages import PageAllocator, PageStats, pages_for
-from repro.core.wire import (DraftPayload, VerdictPayload, WireFormat,
-                             packed_bits)
+from repro.core.transport import TransportError
+from repro.core.wire import (DraftPayload, VerdictPayload,
+                             WireDecodeError, WireFormat, packed_bits)

@@ -57,7 +57,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.wire import (BitReader, BitWriter, DraftPayload,
-                             VerdictPayload, field_width)
+                             VerdictPayload, WireDecodeError, field_width)
 
 MASK32 = (1 << 32) - 1
 RANGE_TOP = 1 << 24          # renormalise while range < RANGE_TOP
@@ -384,6 +384,8 @@ def _encode_draft(fmt, p: DraftPayload) -> Optional[BitWriter]:
 
 def _decode_draft(fmt, r: BitReader) -> DraftPayload:
     n = int(r.read(fmt.n_field)[0])
+    if n > fmt.L_max:
+        raise WireDecodeError(f"draft count {n} exceeds L_max={fmt.L_max}")
     Ka = min(fmt.V, fmt.ell)
     small_V = fmt.V <= MAX_TOTAL
     tokens, Ks = [], []
@@ -408,7 +410,11 @@ def _decode_draft(fmt, r: BitReader) -> DraftPayload:
     for K in Ks:
         k = rice_param(fmt.ell, K)
         cnt = [rice_decode(r, k, fmt.ell - 1) + 1 for _ in range(K - 1)]
-        cnt.append(fmt.ell - sum(cnt))
+        last = fmt.ell - sum(cnt)
+        if last < 1:
+            raise WireDecodeError(
+                "lattice counts exceed ℓ: corrupt coded draft body")
+        cnt.append(last)
         counts.append(tuple(cnt))
     betas = tuple(float(b) for b in r.read_f32(n + 1))
     return DraftPayload(tokens=tuple(tokens), supports=tuple(supports),
@@ -482,6 +488,9 @@ def unpack_verdict_v2(fmt, data: bytes) -> VerdictPayload:
     if int(r.read(1)[0]):
         return fmt.read_verdict_body(r)
     T = fmt.L_max - rice_decode(r, verdict_rice_k(fmt.L_max), fmt.L_max)
+    if T < 0:
+        raise WireDecodeError(
+            "accept-length residue exceeds L_max: corrupt verdict body")
     return VerdictPayload(
         n_accept=T,
         new_token=int(r.read(fmt.tok_field)[0]),
@@ -528,8 +537,14 @@ def _encode_verdict_batch(fmt, items, n_slots: int) -> Optional[BitWriter]:
 
 def _decode_verdict_batch(fmt, r: BitReader, n_slots: int):
     m = int(r.read(8)[0])
+    if not 1 <= m <= fmt.MAX_BATCH_VERDICTS:
+        raise WireDecodeError(f"verdict frame count {m} out of range")
     sf = fmt.slot_field(n_slots)
     slots = [int(s) for s in r.read(sf, m)]
+    if slots != sorted(set(slots)) or slots[-1] >= n_slots:
+        raise WireDecodeError(
+            f"verdict frame slots not ascending unique in-range: "
+            f"{slots} (n_slots={n_slots})")
     dec = RangeDecoder(r)
     resid_model = AdaptiveModel(fmt.L_max + 1)
     tok_model = UniformModel(fmt.V)

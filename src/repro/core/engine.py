@@ -716,24 +716,28 @@ class CloudVerifyEngine:
 
 
 # ======================================================================
-# Facade: slot lifecycle + lockstep rounds over the wire
+# Edge-side base: slot lifecycle + per-slot round steps
 # ======================================================================
-class EdgeCloudEngine:
-    """Owns the two actors, the slot lifecycle and the (mirrored) page
-    allocator; moves packed payloads between them.  ``run_round`` is the
-    lockstep schedule (draft ∥ … then verify then feedback — the paper's
-    Algorithm 1); the event-driven pipelined schedule lives in
-    ``repro.serve.events`` and drives the per-slot methods instead."""
+class EdgeEngineBase:
+    """Everything the serving loops need from the EDGE side of the link:
+    format negotiation, the draft actor, the slot lifecycle, per-slot
+    drafting, speculative continuation and verdict application.
+
+    Two engines extend it: the in-process ``EdgeCloudEngine`` below
+    (adds the cloud actor, the mirrored page allocator hooks and the
+    lockstep ``run_round``) and the socket-transport client engine
+    (``repro.serve.net.EdgeTransportEngine`` — its verify side lives in
+    another PROCESS behind ``core.transport``).  Sharing this class is
+    what makes the simulated and socketed paths bit-identical BY
+    CONSTRUCTION: there is exactly one implementation of every
+    token-affecting edge step, and subclasses only override how the
+    verify peer is reached (``_init_peer_slots`` / ``_admit_peer`` /
+    ``_push_tables``)."""
 
     def __init__(self, draft_cfg: ModelConfig, draft_params,
-                 target_cfg: ModelConfig, target_params,
-                 method: MethodConfig, engine: EngineConfig = EngineConfig(),
-                 channel: channel_mod.ChannelConfig =
-                 channel_mod.ChannelConfig(),
-                 seed: int = 0):
-        assert draft_cfg.vocab == target_cfg.vocab, "shared vocabulary"
-        self.dc, self.tc = draft_cfg, target_cfg
-        self.dp, self.tp = draft_params, target_params
+                 method: MethodConfig, engine: EngineConfig,
+                 channel: channel_mod.ChannelConfig, seed: int):
+        self.dc, self.dp = draft_cfg, draft_params
         self.m, self.e, self.ch = method, engine, channel
         self.seed = seed
         self.V = draft_cfg.vocab
@@ -746,10 +750,8 @@ class EdgeCloudEngine:
             codec=engine.wire_codec)
         self.edge = EdgeDraftEngine(draft_cfg, draft_params, method,
                                     engine, self.fmt, seed)
-        self.cloud = CloudVerifyEngine(target_cfg, target_params, method,
-                                       engine, self.fmt, seed)
-        self._target_stateful = self.cloud.stateful
-        self.paged = False
+        self.peer_stateful = False    # does the verify-side model carry
+        self.paged = False            # recurrent state? (subclasses set)
         self.alloc: Optional[PageAllocator] = None
 
     # -- state passthroughs (tests/benchmarks read these) ---------------
@@ -769,24 +771,6 @@ class EdgeCloudEngine:
     def dcache(self):
         return self.edge.dcache
 
-    @property
-    def tcache(self):
-        return self.cloud.tcache
-
-    # ------------------------------------------------------------------
-    def prefill(self, prompts):
-        """prompts: (B, S0) int32.  Prepares both actors; the last prompt
-        token becomes x_last (first token the draft loop processes)."""
-        B, S0 = prompts.shape
-        self.B = B
-        self.paged = False
-        self.alloc = None
-        total = S0 + 4096  # cache capacity headroom
-        self.edge.prefill_batch(prompts, total)
-        self.cloud.prefill_batch(prompts, total)
-        self.active = np.ones((B,), bool)
-        self.out_tokens = [[] for _ in range(B)]
-
     # ------------------------------------------------------------------
     # Session-slot API (continuous batching — repro.serve)
     # ------------------------------------------------------------------
@@ -803,8 +787,7 @@ class EdgeCloudEngine:
         allocator (identical admit/grow/shrink sequences on both sides
         of the link keep their pools in lockstep), so HBM holds the sum
         of ACTUAL request lengths and ``n_pages`` caps concurrency."""
-        assert self.dc.n_encoder_layers == 0 and \
-            self.tc.n_encoder_layers == 0, \
+        assert self.dc.n_encoder_layers == 0, \
             "serving slots do not support encoder-decoder architectures"
         self.B = n_slots
         self.paged = page_size > 0
@@ -822,18 +805,21 @@ class EdgeCloudEngine:
             self.alloc = None
         self.cache_len = cache_len
         self.edge.init_slots(n_slots, cache_len, spec)
-        self.cloud.init_slots(n_slots, cache_len, spec)
+        self._init_peer_slots(n_slots, cache_len, spec)
         self.active = np.zeros((n_slots,), bool)
         self.out_tokens = [[] for _ in range(n_slots)]
+
+    def _init_peer_slots(self, n_slots: int, cache_len: int,
+                         spec: Optional[PagedSpec]):
+        """Hook: mirror the slot allocation on the verify side (the
+        in-process cloud actor, or a remote server's own init)."""
 
     # -- paged-pool bookkeeping (host side; no-ops in dense mode) -------
     def _device_tables(self):
         return sanitize_page_table(self.alloc.table, self.alloc.n_pages)
 
     def _push_tables(self):
-        pt = self._device_tables()
-        self.edge.set_tables(pt)
-        self.cloud.set_tables(pt)
+        self.edge.set_tables(self._device_tables())
 
     def pages_needed(self, n_tokens: int) -> int:
         assert self.paged
@@ -898,9 +884,13 @@ class EdgeCloudEngine:
                     f"should gate admissions on free_pages()")
             pt_row = self._device_tables()[slot]
         self.edge.admit(slot, prompt, pt_row, seed, wire_codec=wire_codec)
-        self.cloud.admit(slot, prompt, pt_row, seed, wire_codec=wire_codec)
+        self._admit_peer(slot, prompt, pt_row, seed, wire_codec)
         self.active[slot] = True
         self.out_tokens[slot] = []
+
+    def _admit_peer(self, slot: int, prompt, pt_row, seed: int,
+                    wire_codec: Optional[str]):
+        """Hook: mirror the admission on the verify side."""
 
     def release_slot(self, slot: int):
         """Evict a finished (or preempted) request.  Dense mode: the
@@ -933,7 +923,7 @@ class EdgeCloudEngine:
         """Optimistic continuation for ``slot`` while its round is in
         flight.  Returns None when speculation is pointless or unsafe
         (window would exceed slot capacity / page pool)."""
-        if self.edge.stateful or self.cloud.stateful:
+        if self.edge.stateful or self.peer_stateful:
             return None
         n = rec.n_live
         pos_next = int(np.asarray(self.pos)[slot]) + n + 1
@@ -957,43 +947,10 @@ class EdgeCloudEngine:
         return (verdict.n_accept == rec.n_live
                 and verdict.new_token == spec.in_x)
 
-    def verify_slots(self, packed: Dict[int, bytes]) -> VerifyBatch:
-        """Cloud side of one round for the slots whose payloads arrived:
-        unpack (with each slot's negotiated codec), verify, pack
-        verdicts."""
-        mask = np.zeros((self.B,), bool)
-        mask[list(packed)] = True
-        if self.paged:
-            self._push_tables()
-        payloads = wire_mod.unpack_drafts(
-            self.fmt, packed,
-            codecs={s: self.cloud.slot_codec[s] for s in packed})
-        return self.cloud.verify(mask, payloads)
-
-    # -- per-slot verdict codec (the downlink mirror of the uplink
-    #    negotiation; events.py and run_round both route through these)
-    def pack_verdict_slot(self, slot: int,
-                          v: wire_mod.VerdictPayload) -> bytes:
-        return self.fmt.pack_verdict(v, codec=self.cloud.slot_codec[slot])
-
     def unpack_verdict_slot(self, slot: int,
                             data: bytes) -> wire_mod.VerdictPayload:
         return self.fmt.unpack_verdict(data,
                                        codec=self.edge.slot_codec[slot])
-
-    # -- verdict BATCHING (one coded downlink frame per cell).  A frame
-    #    serves many requests at once, so its codec is the LINK's
-    #    negotiated version (EngineConfig.wire_codec), never a
-    #    per-request override — both actors resolve it identically from
-    #    static config, so nothing version-related rides the wire.
-    def pack_verdict_batch(self, verdicts: Dict[int,
-                                                wire_mod.VerdictPayload]
-                           ) -> bytes:
-        """Cloud side: coalesce one cell's verdicts (ascending slot
-        order — the deterministic frame order both ends rely on) into
-        one downlink frame."""
-        items = sorted(verdicts.items())
-        return self.fmt.pack_verdict_batch(items, self.B)
 
     def unpack_verdict_batch(self, data: bytes):
         """Edge side: decode a cell's frame back to ascending-slot
@@ -1013,6 +970,99 @@ class EdgeCloudEngine:
         if self.paged and shrink:
             self.alloc.shrink(slot, int(np.asarray(self.pos)[slot]))
         return emitted
+
+
+# ======================================================================
+# Facade: slot lifecycle + lockstep rounds over the wire
+# ======================================================================
+class EdgeCloudEngine(EdgeEngineBase):
+    """Owns the two actors, the slot lifecycle and the (mirrored) page
+    allocator; moves packed payloads between them.  ``run_round`` is the
+    lockstep schedule (draft ∥ … then verify then feedback — the paper's
+    Algorithm 1); the event-driven pipelined schedule lives in
+    ``repro.serve.events`` and drives the per-slot methods instead."""
+
+    def __init__(self, draft_cfg: ModelConfig, draft_params,
+                 target_cfg: ModelConfig, target_params,
+                 method: MethodConfig, engine: EngineConfig = EngineConfig(),
+                 channel: channel_mod.ChannelConfig =
+                 channel_mod.ChannelConfig(),
+                 seed: int = 0):
+        assert draft_cfg.vocab == target_cfg.vocab, "shared vocabulary"
+        super().__init__(draft_cfg, draft_params, method, engine,
+                         channel, seed)
+        self.tc, self.tp = target_cfg, target_params
+        self.cloud = CloudVerifyEngine(target_cfg, target_params, method,
+                                       engine, self.fmt, seed)
+        self._target_stateful = self.cloud.stateful
+        self.peer_stateful = self.cloud.stateful
+
+    @property
+    def tcache(self):
+        return self.cloud.tcache
+
+    # ------------------------------------------------------------------
+    def prefill(self, prompts):
+        """prompts: (B, S0) int32.  Prepares both actors; the last prompt
+        token becomes x_last (first token the draft loop processes)."""
+        B, S0 = prompts.shape
+        self.B = B
+        self.paged = False
+        self.alloc = None
+        total = S0 + 4096  # cache capacity headroom
+        self.edge.prefill_batch(prompts, total)
+        self.cloud.prefill_batch(prompts, total)
+        self.active = np.ones((B,), bool)
+        self.out_tokens = [[] for _ in range(B)]
+
+    # -- verify-side hooks (the in-process cloud actor) -----------------
+    def _init_peer_slots(self, n_slots: int, cache_len: int,
+                         spec: Optional[PagedSpec]):
+        assert self.tc.n_encoder_layers == 0, \
+            "serving slots do not support encoder-decoder architectures"
+        self.cloud.init_slots(n_slots, cache_len, spec)
+
+    def _admit_peer(self, slot: int, prompt, pt_row, seed: int,
+                    wire_codec: Optional[str]):
+        self.cloud.admit(slot, prompt, pt_row, seed, wire_codec=wire_codec)
+
+    def _push_tables(self):
+        pt = self._device_tables()
+        self.edge.set_tables(pt)
+        self.cloud.set_tables(pt)
+
+    def verify_slots(self, packed: Dict[int, bytes]) -> VerifyBatch:
+        """Cloud side of one round for the slots whose payloads arrived:
+        unpack (with each slot's negotiated codec), verify, pack
+        verdicts."""
+        mask = np.zeros((self.B,), bool)
+        mask[list(packed)] = True
+        if self.paged:
+            self._push_tables()
+        payloads = wire_mod.unpack_drafts(
+            self.fmt, packed,
+            codecs={s: self.cloud.slot_codec[s] for s in packed})
+        return self.cloud.verify(mask, payloads)
+
+    # -- per-slot verdict codec (the downlink mirror of the uplink
+    #    negotiation; events.py and run_round both route through these)
+    def pack_verdict_slot(self, slot: int,
+                          v: wire_mod.VerdictPayload) -> bytes:
+        return self.fmt.pack_verdict(v, codec=self.cloud.slot_codec[slot])
+
+    # -- verdict BATCHING (one coded downlink frame per cell).  A frame
+    #    serves many requests at once, so its codec is the LINK's
+    #    negotiated version (EngineConfig.wire_codec), never a
+    #    per-request override — both actors resolve it identically from
+    #    static config, so nothing version-related rides the wire.
+    def pack_verdict_batch(self, verdicts: Dict[int,
+                                                wire_mod.VerdictPayload]
+                           ) -> bytes:
+        """Cloud side: coalesce one cell's verdicts (ascending slot
+        order — the deterministic frame order both ends rely on) into
+        one downlink frame."""
+        items = sorted(verdicts.items())
+        return self.fmt.pack_verdict_batch(items, self.B)
 
     # ------------------------------------------------------------------
     def run_round(self, verdict_groups: Optional[List[List[int]]] = None):

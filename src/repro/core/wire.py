@@ -73,6 +73,29 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 
+class WireDecodeError(ValueError):
+    """A wire frame failed to decode: truncated, or fields out of range.
+
+    Every ``unpack_*`` entry point (both codec versions) funnels decode
+    failures through this type — a transport that receives corrupt bytes
+    gets ONE exception class to catch, never a stray ``IndexError`` or
+    an assertion from deep inside the range coder, and never a silently
+    nonsensical payload with out-of-vocabulary ids."""
+
+
+def _decode(fn):
+    """Run a decode thunk, converting any low-level failure (truncated
+    BitReader, range-coder assertion, combinatorial unranking error)
+    into a typed WireDecodeError."""
+    try:
+        return fn()
+    except WireDecodeError:
+        raise
+    except (AssertionError, IndexError, KeyError, OverflowError,
+            ValueError, ZeroDivisionError) as e:
+        raise WireDecodeError(f"corrupt wire frame: {e!r}") from e
+
+
 def field_width(max_value: int) -> int:
     """Bits for a fixed-width field holding integers 0..max_value."""
     assert max_value >= 0
@@ -121,7 +144,10 @@ class BitReader:
     def read(self, width: int, count: int = 1) -> np.ndarray:
         n = width * count
         chunk = self._bits[self._cur:self._cur + n]
-        assert chunk.size == n, "wire payload truncated"
+        if chunk.size != n:
+            raise WireDecodeError(
+                f"wire payload truncated: wanted {n} bits at offset "
+                f"{self._cur}, have {self._bits.size - self._cur}")
         self._cur += n
         weights = (np.uint64(1) << np.arange(width - 1, -1, -1,
                                              dtype=np.uint64))
@@ -231,12 +257,17 @@ class WireFormat:
                      codec: Optional[str] = None) -> DraftPayload:
         if self._codec(codec) == "v2":
             from repro.core import coding
-            return coding.unpack_draft_v2(self, data)
-        return self.read_draft_body(BitReader(data))
+            return _decode(lambda: coding.unpack_draft_v2(self, data))
+        return _decode(lambda: self.read_draft_body(BitReader(data)))
 
     def read_draft_body(self, r: BitReader) -> DraftPayload:
         n = int(r.read(self.n_field)[0])
+        if n > self.L_max:
+            raise WireDecodeError(
+                f"draft count {n} exceeds L_max={self.L_max}")
         tokens = tuple(int(t) for t in r.read(self.tok_field, n))
+        if any(t >= self.V for t in tokens):
+            raise WireDecodeError("draft token id out of vocabulary")
         supports, counts, probs = [], [], []
         if self.mode == "raw":
             for _ in range(n):
@@ -247,8 +278,14 @@ class WireFormat:
         else:
             for _ in range(n):
                 k = int(r.read(self.k_field)[0])
+                if k > self.V:
+                    raise WireDecodeError(
+                        f"support size {k} exceeds V={self.V}")
                 if k < self.V:
                     sup = tuple(int(i) for i in r.read(self.tok_field, k))
+                    if any(i >= self.V for i in sup):
+                        raise WireDecodeError(
+                            "support index out of vocabulary")
                 else:
                     sup = tuple(range(self.V))
                 cnt = tuple(int(c) for c in r.read(self.cnt_field, k))
@@ -279,14 +316,20 @@ class WireFormat:
                        codec: Optional[str] = None) -> VerdictPayload:
         if self._codec(codec) == "v2":
             from repro.core import coding
-            return coding.unpack_verdict_v2(self, data)
-        return self.read_verdict_body(BitReader(data))
+            return _decode(lambda: coding.unpack_verdict_v2(self, data))
+        return _decode(lambda: self.read_verdict_body(BitReader(data)))
 
     def read_verdict_body(self, r: BitReader) -> VerdictPayload:
-        return VerdictPayload(
+        v = VerdictPayload(
             n_accept=int(r.read(self.n_field)[0]),
             new_token=int(r.read(self.tok_field)[0]),
             beta_next=float(r.read_f32(1)[0]))
+        if v.n_accept > self.L_max:
+            raise WireDecodeError(
+                f"accept length {v.n_accept} exceeds L_max={self.L_max}")
+        if v.new_token >= self.V:
+            raise WireDecodeError("verdict token id out of vocabulary")
+        return v
 
     # -- verdict batch (one coded downlink frame per cell) --------------
     MAX_BATCH_VERDICTS = 255     # count field is one byte
@@ -314,8 +357,14 @@ class WireFormat:
 
     def read_verdict_batch_body(self, r: BitReader, n_slots: int):
         m = int(r.read(8)[0])
+        if not 1 <= m <= self.MAX_BATCH_VERDICTS:
+            raise WireDecodeError(f"verdict frame count {m} out of range")
         sf = self.slot_field(n_slots)
         slots = [int(s) for s in r.read(sf, m)]
+        if slots != sorted(set(slots)) or slots[-1] >= n_slots:
+            raise WireDecodeError(
+                f"verdict frame slots not ascending unique in-range: "
+                f"{slots} (n_slots={n_slots})")
         return [(s, self.read_verdict_body(r)) for s in slots]
 
     def pack_verdict_batch(self, items, n_slots: int,
@@ -336,8 +385,10 @@ class WireFormat:
                              codec: Optional[str] = None):
         if self._codec(codec) == "v2":
             from repro.core import coding
-            return coding.unpack_verdict_batch_v2(self, data, n_slots)
-        return self.read_verdict_batch_body(BitReader(data), n_slots)
+            return _decode(
+                lambda: coding.unpack_verdict_batch_v2(self, data, n_slots))
+        return _decode(
+            lambda: self.read_verdict_batch_body(BitReader(data), n_slots))
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,60 @@
+"""Cloud verify server: the cloud half of two-process serving.
+
+Listens for per-cell edge connections and serves VERIFY RPCs from a
+``CloudVerifyEngine``.  No model flags here — the session handshake
+carries the full arch/smoke/method/engine config digest, and the server
+builds its target model from it exactly as the edge builds its draft
+(target params from PRNGKey(seed+1)); parameters never cross the wire.
+
+    PYTHONPATH=src python -m repro.launch.cloud --port 0 --port-file /tmp/cloud.port
+
+Then point the edge driver at it:
+
+    PYTHONPATH=src python -m repro.launch.serve ... --trace \
+        --transport tcp --cloud-port $(cat /tmp/cloud.port)
+
+``--port 0`` binds an ephemeral port; ``--port-file`` publishes the
+bound port for scripts (the CI transport-smoke job polls it).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+
+from repro.serve.net import CloudServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="TCP port (0 = ephemeral, see --port-file)")
+    ap.add_argument("--port-file", default="",
+                    help="write the bound port number to this file "
+                         "once listening")
+    ap.add_argument("--io-timeout-s", type=float, default=300.0,
+                    help="per-connection socket timeout")
+    args = ap.parse_args()
+
+    server = CloudServer(host=args.host, port=args.port,
+                         io_timeout_s=args.io_timeout_s)
+    print(f"[cloud] listening on {server.host}:{server.port}",
+          flush=True)
+    if args.port_file:
+        with open(args.port_file, "w") as f:
+            f.write(str(server.port))
+
+    def _term(signum, frame):
+        server.stop()
+        sys.exit(0)
+
+    signal.signal(signal.SIGTERM, _term)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        server.stop()
+
+
+if __name__ == "__main__":
+    main()

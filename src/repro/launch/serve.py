@@ -48,6 +48,84 @@ def load_or_init(cfg, ckpt, seed):
     return init_params(cfg, jax.random.PRNGKey(seed))
 
 
+def run_tcp_vs_sim(args, tc, dc, dp, sim_rep, cache_len):
+    """Replay the SAME seeded trace over real sockets, with the
+    simulated run as differential oracle: token streams must be
+    bit-identical (the transport moves bytes, never tokens), while the
+    tcp side reports MEASURED wall-clock latency next to the sim's
+    modeled clock."""
+    from repro.serve.net import CloudServer, EdgeClient
+
+    assert args.page_size == 0, \
+        "--transport tcp serves dense slots only"
+    method = MethodConfig(args.method, K=args.K, ell=args.ell,
+                          alpha=args.alpha, eta=args.eta)
+    ecfg = EngineConfig(L_max=args.L_max, bit_budget=args.bit_budget,
+                        temperature=args.temperature,
+                        wire_codec=args.wire_codec,
+                        budget_model=args.budget_model)
+    cfg = ServeConfig(
+        max_batch=args.max_batch, queue_cap=args.queue_cap,
+        policy=args.policy, cache_len=cache_len,
+        pipeline=args.pipeline, speculate=not args.no_speculate,
+        n_cells=args.cells, verdict_batch=args.verdict_batch)
+    # a fresh trace: Request objects are mutated by a run, and the
+    # generator is fully determined by its seeded config
+    trace = poisson_trace(TraceConfig(
+        n_requests=args.n_requests, rate_rps=args.rate,
+        prompt_len=args.prompt_len, min_new_tokens=args.min_new_tokens,
+        max_new_tokens=args.max_new_tokens, vocab=tc.vocab,
+        seed=args.seed, cells=args.cells))
+
+    server = None
+    port = args.cloud_port
+    try:
+        if port == 0:
+            server = CloudServer(host=args.cloud_host).start()
+            port = server.port
+            print(f"[tcp] in-process cloud server on "
+                  f"{args.cloud_host}:{port}")
+        client = EdgeClient(dc, dp, method, ecfg, cfg,
+                            arch=args.arch, smoke=args.smoke,
+                            host=args.cloud_host, port=port,
+                            seed=args.seed)
+        with client:
+            net_rep = client.run_trace(trace)
+    finally:
+        if server is not None:
+            server.stop()
+
+    sim_streams = {r.rid: tuple(r.tokens) for r in sim_rep.requests}
+    tcp_streams = net_rep.streams()
+    print(f"[serve --trace --transport tcp] {tc.name} <- {dc.name}  "
+          f"method={args.method} pipeline={args.pipeline} "
+          f"codec={args.wire_codec} cells={args.cells} "
+          f"verdict_batch={args.verdict_batch}")
+    print(f"  sim  makespan={sim_rep.makespan_s:.4f}s (modeled clock)")
+    s = net_rep.summary()
+    print(f"  tcp  makespan={s['makespan_s']:.4f}s (measured), "
+          f"{s['n_verify_rpcs']} verify RPCs")
+    print(f"  tcp  rpc round  mean={s['rpc_round_s']['mean']*1e3:.2f}ms "
+          f"p50={s['rpc_round_s']['p50']*1e3:.2f}ms "
+          f"p95={s['rpc_round_s']['p95']*1e3:.2f}ms")
+    print(f"  tcp  verify (server) mean={s['t_llm_s']['mean']*1e3:.2f}ms"
+          f"  draft (edge) mean={s['t_slm_s']['mean']*1e3:.2f}ms")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"sim": sim_rep.summary(), "tcp": s,
+                       "identical": tcp_streams == sim_streams,
+                       "args": vars(args)}, f, indent=1)
+    if tcp_streams == sim_streams:
+        print(f"[PASS-TRANSPORT] tcp == sim: {len(tcp_streams)} streams "
+              f"bit-identical over real sockets")
+        return
+    bad = [rid for rid in sorted(set(sim_streams) | set(tcp_streams))
+           if sim_streams.get(rid) != tcp_streams.get(rid)]
+    print(f"[FAIL-TRANSPORT] streams diverge for rids {bad[:8]}"
+          f"{'...' if len(bad) > 8 else ''}")
+    raise SystemExit(1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -118,6 +196,18 @@ def main():
                          "into one coded downlink frame per verify "
                          "batch (amortises per-message framing in "
                          "downlink-limited regimes)")
+    ap.add_argument("--transport", default="sim",
+                    choices=["sim", "tcp"],
+                    help="trace mode: 'sim' replays over the modeled "
+                         "channel; 'tcp' drives a real CloudServer over "
+                         "sockets AND runs the simulator as differential "
+                         "oracle — streams must be bit-identical "
+                         "([PASS-TRANSPORT])")
+    ap.add_argument("--cloud-host", default="127.0.0.1")
+    ap.add_argument("--cloud-port", type=int, default=0,
+                    help="tcp transport: CloudServer port (0 = spawn an "
+                         "in-process threaded server on an ephemeral "
+                         "port)")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-slot cache capacity (0 = auto)")
     ap.add_argument("--page-size", type=int, default=0,
@@ -127,6 +217,8 @@ def main():
                     help="trace mode: KV pool size in pages (0 = auto: "
                          "slots x pages-per-slot, the dense footprint)")
     args = ap.parse_args()
+    if args.transport == "tcp" and not args.trace:
+        ap.error("--transport tcp requires --trace")
 
     tc = configs.get_config(args.arch)
     if args.smoke:
@@ -166,6 +258,8 @@ def main():
             n_cells=args.cells,
             verdict_batch=args.verdict_batch))
         rep = sess.run_trace(trace)
+        if args.transport == "tcp":
+            return run_tcp_vs_sim(args, tc, dc, dp, rep, cache_len)
         kv = (f"paged({args.page_size}-tok pages)" if args.page_size
               else "dense")
         print(f"[serve --trace] {tc.name} <- {dc.name}  "

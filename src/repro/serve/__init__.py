@@ -7,18 +7,26 @@
                                  one cloud verifier
     ServeSession, ServeConfig  — serving loop, contended-link clock
     EventDrivenLoop, EventQueue— pipelined schedule (serve.events)
+    RoundStateMachine          — clock-free round logic shared by the
+                                 simulator and the socket runner
+    CloudServer, EdgeClient    — two-process TCP serving (serve.net)
     ServeReport                — throughput / latency-percentile report
     TraceConfig, poisson_trace — seeded per-cell Poisson workloads
 """
 from repro.serve.cells import Cell, CellTopology
-from repro.serve.events import EventDrivenLoop, EventQueue
+from repro.serve.events import (EventDrivenLoop, EventQueue,
+                                RoundStateMachine, VerdictOutcome)
+from repro.serve.net import (CloudServer, EdgeClient,
+                             EdgeTransportEngine, NetReport)
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Scheduler, SchedulerConfig
 from repro.serve.session import ServeConfig, ServeReport, ServeSession
 from repro.serve.trace import TraceConfig, poisson_trace
 
 __all__ = [
-    "Cell", "CellTopology", "EventDrivenLoop", "EventQueue", "Request",
-    "RequestState", "Scheduler", "SchedulerConfig", "ServeConfig",
-    "ServeReport", "ServeSession", "TraceConfig", "poisson_trace",
+    "Cell", "CellTopology", "CloudServer", "EdgeClient",
+    "EdgeTransportEngine", "EventDrivenLoop", "EventQueue", "NetReport",
+    "Request", "RequestState", "RoundStateMachine", "Scheduler",
+    "SchedulerConfig", "ServeConfig", "ServeReport", "ServeSession",
+    "TraceConfig", "VerdictOutcome", "poisson_trace",
 ]

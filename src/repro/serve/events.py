@@ -104,10 +104,144 @@ class _SlotCtx:
     spec_ready_s: float = 0.0
 
 
+@dataclasses.dataclass
+class VerdictOutcome:
+    """What one verdict did to its request — the state machine's answer
+    the driving loop turns into its next action: stop (``finished``),
+    send the confirmed speculative round (``spec_round``), or start a
+    corrective draft (neither)."""
+    req: Request
+    emitted: List[int]
+    finished: bool
+    spec_round: Optional[PendingRound]
+
+
+class RoundStateMachine:
+    """The clock-free per-slot round logic shared by the simulated
+    ``EventDrivenLoop`` and the socket runner (``repro.serve.net``):
+    admission into engine slots, drafting, optimistic continuation and
+    verdict application — every TOKEN-AFFECTING step, with the clock
+    and the transport (simulated links vs real sockets) left entirely
+    to the caller.  One implementation of the round logic is what makes
+    tcp == sim bit-identical by construction rather than by parallel
+    maintenance.
+
+    ``now`` arguments are whatever clock the caller runs (virtual
+    seconds in the simulator, wall-clock seconds over sockets); they
+    feed request METRICS only, never token decisions."""
+
+    def __init__(self, eng, sched, speculate: bool, cache_len: int):
+        self.eng = eng
+        self.sched = sched
+        self.speculate = speculate
+        self.cache_len = cache_len
+        self.slots: Dict[int, _SlotCtx] = {}
+        self.n_drafts = 0
+        self.n_spec_hits = 0
+        self.n_spec_misses = 0
+
+    # -- admission ------------------------------------------------------
+    def cache_need(self, req: Request) -> int:
+        """Worst-case slot footprint: prompt + generation + one draft
+        window (the engine's admit-time capacity contract)."""
+        return int(req.prompt.shape[0]) + req.max_new_tokens \
+            + self.eng.e.L_max + 1
+
+    def submit(self, req: Request, now: float) -> bool:
+        """Queue an arrival; oversized requests are rejected up front
+        (they could never fit a slot, no matter how empty the system)."""
+        if self.cache_need(req) > self.cache_len:
+            self.sched.reject(req)
+            return False
+        return self.sched.submit(req, now)
+
+    def admit_ready(self, now: float, can_admit=None) -> List[int]:
+        """One scheduling tick: admit waiting requests into free engine
+        slots; returns the newly occupied slot ids (the caller starts
+        their first drafts)."""
+        admitted = []
+        for slot, req in self.sched.schedule(now, can_admit=can_admit):
+            assert self.cache_need(req) <= self.cache_len
+            self.eng.admit_slot(slot, req.prompt, req.seed,
+                                wire_codec=req.wire_codec)
+            self.slots[slot] = _SlotCtx(req=req)
+            admitted.append(slot)
+        return admitted
+
+    # -- drafting -------------------------------------------------------
+    def draft(self, slot: int) -> PendingRound:
+        rec = self.eng.draft_slots([slot])[slot]
+        self.n_drafts += 1
+        self.slots[slot].rec = rec
+        return rec
+
+    def draft_many(self, slots: List[int]) -> Dict[int, PendingRound]:
+        """One BATCHED draft call over several slots (the lockstep
+        barrier's shape) — masked-batch equivalence makes the rounds
+        identical to per-slot drafting."""
+        recs = self.eng.draft_slots(list(slots))
+        self.n_drafts += len(recs)
+        for s, rec in recs.items():
+            self.slots[s].rec = rec
+        return recs
+
+    def would_finish(self, req: Request, rec: PendingRound) -> bool:
+        """Under the optimistic premise the request emits n_live+1
+        tokens — if that completes it, round t+1 never runs."""
+        return req.n_tokens + rec.n_live + 1 >= req.max_new_tokens
+
+    def speculate_after(self, slot: int,
+                        rec: PendingRound) -> Optional[SpecDraft]:
+        """Optimistic round t+1 once ``rec``'s payload is in flight."""
+        ctx = self.slots[slot]
+        if not self.speculate or self.would_finish(ctx.req, rec):
+            return None
+        spec = self.eng.draft_speculative_slot(slot, rec)
+        if spec is not None:
+            self.n_drafts += 1
+            ctx.spec = spec
+        return spec
+
+    # -- verdict application --------------------------------------------
+    def apply_verdict(self, slot: int, verdict,
+                      now: float) -> VerdictOutcome:
+        ctx = self.slots[slot]
+        rec, ctx.rec = ctx.rec, None
+        spec, ctx.spec = ctx.spec, None
+        req = ctx.req
+        hit = spec is not None and \
+            self.eng.spec_premise_holds(spec, rec, verdict)
+        # on a hit the speculative round's draft window must survive the
+        # post-verdict page shrink; on a miss it is reclaimed
+        emitted = self.eng.apply_verdict_slot(slot, verdict, rec,
+                                              shrink=not hit)
+        req.n_rounds += 1
+        finished = req.add_tokens(emitted, now)
+        if finished:
+            self.sched.complete(req, now)
+            self.eng.release_slot(slot)
+            del self.slots[slot]
+            return VerdictOutcome(req=req, emitted=emitted,
+                                  finished=True, spec_round=None)
+        if hit:
+            self.n_spec_hits += 1
+            self.eng.commit_speculative(spec)
+            ctx.rec = spec.round     # the confirmed round is now in flight
+            return VerdictOutcome(req=req, emitted=emitted,
+                                  finished=False, spec_round=spec.round)
+        if spec is not None:
+            self.n_spec_misses += 1   # abort is free (cancelled work)
+        return VerdictOutcome(req=req, emitted=emitted,
+                              finished=False, spec_round=None)
+
+
 class EventDrivenLoop:
     """Drives a ServeSession's engine/scheduler/uplink through the
     event heap.  Token streams are bit-identical to the lockstep loop;
-    only the CLOCK differs (overlap instead of barriers)."""
+    only the CLOCK differs (overlap instead of barriers).  All token-
+    affecting steps live in the shared ``RoundStateMachine``; this class
+    owns the virtual clock, the simulated links and the paged
+    reservation accounting."""
 
     def __init__(self, sess):
         self.sess = sess
@@ -115,20 +249,31 @@ class EventDrivenLoop:
         self.sched = sess.sched
         self.topo = sess.topo
         self.cfg = sess.cfg
-        assert not (self.eng.edge.stateful or self.eng.cloud.stateful), \
+        assert not (self.eng.edge.stateful or self.eng.peer_stateful), \
             "pipelined serving requires attention-only draft/target " \
             "models (sequential-state rollback is lockstep-only)"
         self.now = 0.0
         self._queue = EventQueue()
         self.cloud_busy_until = 0.0
         self.cloud_queue: List[int] = []
-        self.slots: Dict[int, _SlotCtx] = {}
+        self.rsm = RoundStateMachine(self.eng, self.sched,
+                                     cfg_speculate(sess.cfg),
+                                     sess.cache_len)
+        self.slots = self.rsm.slots
         self.reserved_pages = 0
-        self.speculate = cfg_speculate(sess.cfg)
-        self.n_drafts = 0
         self.n_verify_batches = 0
-        self.n_spec_hits = 0
-        self.n_spec_misses = 0
+
+    @property
+    def n_drafts(self) -> int:
+        return self.rsm.n_drafts
+
+    @property
+    def n_spec_hits(self) -> int:
+        return self.rsm.n_spec_hits
+
+    @property
+    def n_spec_misses(self) -> int:
+        return self.rsm.n_spec_misses
 
     # -- clock helpers --------------------------------------------------
     def _dur_slm(self, measured: float) -> float:
@@ -177,7 +322,7 @@ class EventDrivenLoop:
             return None
 
         def gate(req: Request) -> bool:
-            need = self.eng.pages_needed(self.sess._cache_need(req))
+            need = self.eng.pages_needed(self.rsm.cache_need(req))
             if self.reserved_pages + need > self.eng.alloc.n_pages:
                 return False
             # reserve AT THE GATE: several admissions in one scheduling
@@ -188,27 +333,19 @@ class EventDrivenLoop:
         return gate
 
     def _on_arrival(self, req: Request):
-        if self.sess._cache_need(req) > self.sess.cache_len:
-            self.sched.reject(req)
-            return
-        self.sched.submit(req, self.now)
+        self.rsm.submit(req, self.now)
         self._tick_admissions()
 
     def _tick_admissions(self):
-        for slot, req in self.sched.schedule(self.now,
-                                             can_admit=self._worst_case_gate()):
-            assert self.sess._cache_need(req) <= self.sess.cache_len
-            self.eng.admit_slot(slot, req.prompt, req.seed,
-                                wire_codec=req.wire_codec)
-            self.slots[slot] = _SlotCtx(req=req)
+        for slot in self.rsm.admit_ready(self.now,
+                                         can_admit=self._worst_case_gate()):
             self.sess.peak_active = max(self.sess.peak_active,
                                         self.sched.n_active)
             self._start_draft(slot)
 
     # -- edge -----------------------------------------------------------
     def _start_draft(self, slot: int):
-        rec = self.eng.draft_slots([slot])[slot]
-        self.n_drafts += 1
+        rec = self.rsm.draft(slot)
         self._push(self.now + self._dur_slm(rec.t_slm), EDGE_DONE,
                    (slot, rec))
 
@@ -221,18 +358,9 @@ class EventDrivenLoop:
         ctx.req.uplink_wait_s += tx.wait_s
         self._push(tx.arrive_s, UPLINK_ARRIVE, slot)
         # the edge device is idle until the verdict returns: draft ahead
-        if self.speculate and not self._would_finish(ctx.req, rec):
-            spec = self.eng.draft_speculative_slot(slot, rec)
-            if spec is not None:
-                self.n_drafts += 1
-                ctx.spec = spec
-                ctx.spec_ready_s = self.now + self._dur_slm(
-                    spec.round.t_slm)
-
-    def _would_finish(self, req: Request, rec: PendingRound) -> bool:
-        """Under the optimistic premise the request emits n_live+1
-        tokens — if that completes it, round t+1 never runs."""
-        return req.n_tokens + rec.n_live + 1 >= req.max_new_tokens
+        spec = self.rsm.speculate_after(slot, rec)
+        if spec is not None:
+            ctx.spec_ready_s = self.now + self._dur_slm(spec.round.t_slm)
 
     # -- uplink / cloud -------------------------------------------------
     def _on_uplink_arrive(self, slot: int):
@@ -290,35 +418,18 @@ class EventDrivenLoop:
                 slot, self.eng.unpack_verdict_slot(slot, data_v))
 
     def _apply_verdict(self, slot: int, verdict):
-        ctx = self.slots[slot]
-        rec, ctx.rec = ctx.rec, None
-        spec, ctx.spec = ctx.spec, None
-        req = ctx.req
-        hit = spec is not None and \
-            self.eng.spec_premise_holds(spec, rec, verdict)
-        # on a hit the speculative round's draft window must survive the
-        # post-verdict page shrink; on a miss it is reclaimed
-        emitted = self.eng.apply_verdict_slot(slot, verdict, rec,
-                                              shrink=not hit)
-        req.n_rounds += 1
-        finished = req.add_tokens(emitted, self.now)
-        if finished:
-            self.sched.complete(req, self.now)
-            self.eng.release_slot(slot)
+        spec_ready_s = self.slots[slot].spec_ready_s
+        out = self.rsm.apply_verdict(slot, verdict, self.now)
+        if out.finished:
             if self.eng.paged:
                 self.reserved_pages -= self.eng.pages_needed(
-                    self.sess._cache_need(req))
-            del self.slots[slot]
+                    self.rsm.cache_need(out.req))
             self._tick_admissions()
             return
-        if hit:
-            self.n_spec_hits += 1
-            self.eng.commit_speculative(spec)
-            self._push(max(self.now, ctx.spec_ready_s), EDGE_DONE,
-                       (slot, spec.round))
+        if out.spec_round is not None:
+            self._push(max(self.now, spec_ready_s), EDGE_DONE,
+                       (slot, out.spec_round))
         else:
-            if spec is not None:
-                self.n_spec_misses += 1   # abort is free (cancelled work)
             self._start_draft(slot)
 
 

@@ -1,0 +1,320 @@
+"""Socket-transport tests: framing, corrupt-frame robustness, handshake
+negotiation, and the differential oracle — the same seeded trace over
+real TCP must emit token streams bit-identical to the discrete-event
+simulator in both pipeline modes (the transport moves bytes and clocks,
+never tokens).
+
+Every socket here binds port 0 (ephemeral) and carries a finite
+timeout, so a wedged peer fails loud instead of hanging the suite.
+"""
+import socket
+import struct
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import transport as tp_mod
+from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig
+from repro.core.channel import ChannelConfig
+from repro.core.transport import (MSG_ADMIT, MSG_BYE, MSG_HELLO,
+                                  MSG_HELLO_OK, MSG_VERIFY, Conn,
+                                  PROTO_VERSION, TransportError,
+                                  recv_frame, send_frame)
+from repro.core.wire import (DraftPayload, VerdictPayload,
+                             WireDecodeError, WireFormat)
+from repro.models import init_params
+from repro.serve import (CloudServer, EdgeClient, ServeConfig,
+                         ServeSession, TraceConfig, poisson_trace)
+from repro.serve.net import engine_digest
+
+L_MAX = 3
+METHOD = MethodConfig("csqs", alpha=5e-3, eta=5e-2)
+IO_S = 30.0
+
+
+# ======================================================================
+# Framing
+# ======================================================================
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(IO_S)
+    b.settimeout(IO_S)
+    return a, b
+
+
+def test_frame_roundtrip_including_empty_body():
+    a, b = _pair()
+    try:
+        for msg_type, body in [(MSG_HELLO, b'{"proto": 1}'),
+                               (MSG_VERIFY, bytes(range(256)) * 40),
+                               (MSG_BYE, b"")]:
+            send_frame(a, msg_type, body)
+            assert recv_frame(b) == (msg_type, body)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_reassembles_partial_reads():
+    """TCP is a byte stream: a frame dribbled one byte at a time must
+    reassemble exactly."""
+    a, b = _pair()
+    body = b"\x07" * 300
+    raw = struct.pack(">I", 1 + len(body)) + bytes([MSG_VERIFY]) + body
+
+    def dribble():
+        for i in range(len(raw)):
+            a.sendall(raw[i:i + 1])
+            if i % 50 == 0:
+                time.sleep(0.001)
+
+    t = threading.Thread(target=dribble)
+    t.start()
+    try:
+        assert recv_frame(b) == (MSG_VERIFY, body)
+    finally:
+        t.join()
+        a.close()
+        b.close()
+
+
+def test_frame_rejects_garbage_length_and_eof():
+    # zero length
+    a, b = _pair()
+    a.sendall(struct.pack(">I", 0))
+    with pytest.raises(TransportError):
+        recv_frame(b)
+    a.close()
+    b.close()
+    # absurd length: rejected BEFORE any allocation
+    a, b = _pair()
+    a.sendall(struct.pack(">I", tp_mod.MAX_FRAME + 1))
+    with pytest.raises(TransportError):
+        recv_frame(b)
+    a.close()
+    b.close()
+    # peer dies mid-frame
+    a, b = _pair()
+    a.sendall(struct.pack(">I", 100) + b"\x04partial")
+    a.close()
+    with pytest.raises(TransportError):
+        recv_frame(b)
+    b.close()
+
+
+def test_verify_and_verdicts_bodies_roundtrip():
+    items = [(0, b"abc"), (3, b""), (7, bytes(1000))]
+    assert tp_mod.unpack_verify_body(tp_mod.pack_verify_body(items)) \
+        == items
+    t, per_slot, frame = tp_mod.unpack_verdicts_body(
+        tp_mod.pack_verdicts_body(0.125, verdicts=items))
+    assert (t, per_slot, frame) == (0.125, items, None)
+    t, per_slot, frame = tp_mod.unpack_verdicts_body(
+        tp_mod.pack_verdicts_body(0.25, frame=b"coalesced"))
+    assert (t, per_slot, frame) == (0.25, None, b"coalesced")
+
+
+def test_truncated_binary_bodies_raise_transport_error():
+    good = tp_mod.pack_verify_body([(1, b"payload"), (2, b"x" * 40)])
+    for cut in range(len(good)):
+        try:
+            out = tp_mod.unpack_verify_body(good[:cut])
+        except TransportError:
+            continue
+        # a prefix that parses must be a strict sub-list, never garbage
+        assert all(isinstance(s, int) and isinstance(d, bytes)
+                   for s, d in out)
+    good = tp_mod.pack_verdicts_body(0.5, verdicts=[(1, b"verdict")])
+    for cut in range(len(good)):
+        with pytest.raises(TransportError):
+            tp_mod.unpack_verdicts_body(good[:cut])
+
+
+# ======================================================================
+# Corrupt wire frames: WireDecodeError, never a raw crash
+# ======================================================================
+def _valid_draft(fmt: WireFormat, rng) -> DraftPayload:
+    n = int(rng.integers(1, fmt.L_max + 1))
+    tokens, sups, cnts = [], [], []
+    for _ in range(n):
+        K = int(rng.integers(1, min(fmt.V, fmt.ell) + 1))
+        sup = np.sort(rng.choice(fmt.V, K, replace=False))
+        cut = np.sort(rng.choice(fmt.ell - 1, K - 1, replace=False)) + 1
+        cnt = np.diff(np.concatenate([[0], cut, [fmt.ell]]))
+        tokens.append(int(rng.integers(0, fmt.V)))
+        sups.append(tuple(int(i) for i in sup))
+        cnts.append(tuple(int(c) for c in cnt))
+    betas = tuple(float(np.float32(rng.normal(0, 0.3)))
+                  for _ in range(n + 1))
+    return DraftPayload(tokens=tuple(tokens), supports=tuple(sups),
+                        counts=tuple(cnts), betas=betas)
+
+
+def _assert_decodes_or_wire_error(fn):
+    """The robustness contract: corrupt input either still parses (it
+    may alias another valid frame) or raises WireDecodeError — never
+    IndexError / AssertionError / ZeroDivisionError."""
+    try:
+        fn()
+    except WireDecodeError:
+        pass
+
+
+@pytest.mark.parametrize("codec", ["v1", "v2"])
+def test_corrupt_draft_frames_raise_wire_decode_error(codec):
+    rng = np.random.default_rng(0xBAD0)
+    fmt = WireFormat(V=61, ell=40, L_max=4, codec=codec)
+    for trial in range(20):
+        data = fmt.pack_draft(_valid_draft(fmt, rng))
+        for cut in range(len(data)):          # every truncation point
+            _assert_decodes_or_wire_error(
+                lambda: fmt.unpack_draft(data[:cut]))
+        for _ in range(30):                   # random byte corruption
+            bad = bytearray(data)
+            for _ in range(int(rng.integers(1, 4))):
+                bad[int(rng.integers(0, len(bad)))] = int(
+                    rng.integers(0, 256))
+            _assert_decodes_or_wire_error(
+                lambda: fmt.unpack_draft(bytes(bad)))
+    # pure garbage of assorted lengths
+    for n in (0, 1, 2, 7, 63):
+        _assert_decodes_or_wire_error(
+            lambda: fmt.unpack_draft(bytes(rng.integers(0, 256, n))))
+
+
+@pytest.mark.parametrize("codec", ["v1", "v2"])
+def test_corrupt_verdict_frames_raise_wire_decode_error(codec):
+    rng = np.random.default_rng(0xBAD1)
+    fmt = WireFormat(V=61, ell=40, L_max=4, codec=codec)
+    v = VerdictPayload(n_accept=2, new_token=17, beta_next=0.125)
+    data = fmt.pack_verdict(v)
+    for cut in range(len(data)):
+        _assert_decodes_or_wire_error(
+            lambda: fmt.unpack_verdict(data[:cut]))
+    for _ in range(100):
+        bad = bytearray(data)
+        bad[int(rng.integers(0, len(bad)))] = int(rng.integers(0, 256))
+        _assert_decodes_or_wire_error(
+            lambda: fmt.unpack_verdict(bytes(bad)))
+    # batch frames: truncations and corruptions of a 3-verdict frame
+    items = [(0, v), (2, VerdictPayload(0, 3, -0.5)),
+             (5, VerdictPayload(4, 60, 1.0))]
+    frame = fmt.pack_verdict_batch(items, n_slots=8)
+    assert fmt.unpack_verdict_batch(frame, n_slots=8) == items
+    for cut in range(len(frame)):
+        _assert_decodes_or_wire_error(
+            lambda: fmt.unpack_verdict_batch(frame[:cut], n_slots=8))
+    for _ in range(100):
+        bad = bytearray(frame)
+        bad[int(rng.integers(0, len(bad)))] = int(rng.integers(0, 256))
+        _assert_decodes_or_wire_error(
+            lambda: fmt.unpack_verdict_batch(bytes(bad), n_slots=8))
+
+
+# ======================================================================
+# Handshake negotiation
+# ======================================================================
+def _dial(server) -> Conn:
+    return Conn(socket.create_connection((server.host, server.port),
+                                         timeout=IO_S), timeout_s=IO_S)
+
+
+def test_handshake_rejects_bad_proto_codec_and_non_hello():
+    server = CloudServer().start()
+    try:
+        conn = _dial(server)
+        conn.send_json(MSG_HELLO, {"proto": PROTO_VERSION + 1,
+                                   "session": "s", "config": {}})
+        with pytest.raises(TransportError, match="protocol version"):
+            conn.recv_expect(MSG_HELLO_OK)
+        conn.close()
+
+        conn = _dial(server)
+        conn.send_json(MSG_HELLO, {
+            "proto": PROTO_VERSION, "session": "s",
+            "config": {"engine": {"wire_codec": "v99"}}})
+        with pytest.raises(TransportError, match="wire codec"):
+            conn.recv_expect(MSG_HELLO_OK)
+        conn.close()
+
+        conn = _dial(server)
+        conn.send_json(MSG_ADMIT, {"slot": 0})
+        with pytest.raises(TransportError, match="expected HELLO"):
+            conn.recv_expect(MSG_HELLO_OK)
+        conn.close()
+    finally:
+        server.stop()
+
+
+# ======================================================================
+# Differential oracle: tcp == sim, both pipeline modes
+# ======================================================================
+@pytest.fixture(scope="module")
+def pair():
+    tc = configs.smoke_variant(configs.get_config("qwen2.5-3b"))
+    dc = configs.draft_variant(tc, 2)
+    tp = init_params(tc, jax.random.PRNGKey(1))
+    dp = init_params(dc, jax.random.PRNGKey(2))
+    return dc, dp, tc, tp
+
+
+def test_tcp_streams_match_simulator(pair):
+    """The PR's core guarantee: a seeded 2-cell trace served over real
+    sockets is bit-identical to the simulated run, lockstep AND
+    pipelined (with speculation), v1 and v2 wire, verdict batching on
+    the lockstep leg.  Also pins the digest-mismatch rejection against
+    the live session."""
+    dc, dp, tc, tp = pair
+    ecfg = EngineConfig(L_max=L_MAX, bit_budget=4000.0)
+    trace_cfg = TraceConfig(n_requests=4, rate_rps=12.0, prompt_len=8,
+                            min_new_tokens=4, max_new_tokens=7,
+                            vocab=tc.vocab, seed=5, cells=2)
+    server = CloudServer().start()
+    try:
+        for pipeline, codec in (("lockstep", "v1"),
+                                ("pipelined", "v2")):
+            cfg_kw = dict(max_batch=4, cache_len=48, n_cells=2,
+                          pipeline=pipeline,
+                          verdict_batch=(pipeline == "lockstep"))
+            ec = EngineConfig(L_max=L_MAX, bit_budget=4000.0,
+                              wire_codec=codec)
+            eng = EdgeCloudEngine(dc, dp, tc, tp, METHOD, ec,
+                                  ChannelConfig(), seed=0)
+            sim = ServeSession(eng, ServeConfig(
+                t_slm_s=0.01, t_llm_s=0.02, **cfg_kw)).run_trace(
+                poisson_trace(trace_cfg))
+            sim_streams = {r.rid: tuple(r.tokens)
+                           for r in sim.requests}
+            client = EdgeClient(dc, dp, METHOD, ec,
+                                ServeConfig(**cfg_kw),
+                                arch="qwen2.5-3b", smoke=True,
+                                host=server.host, port=server.port,
+                                seed=0, io_timeout_s=IO_S,
+                                session_id=f"difftest-{pipeline}")
+            with client:
+                rep = client.run_trace(poisson_trace(trace_cfg))
+            assert rep.n_finished == trace_cfg.n_requests
+            assert rep.streams() == sim_streams, \
+                (pipeline, codec, "tcp stream diverged from simulator")
+            # measured latency is real wall-clock: present and sane
+            assert rep.rpc_round_s["n"] > 0
+            assert rep.rpc_round_s["mean"] > 0.0
+
+        # a later cell attaching to the live session with a different
+        # config digest must be rejected, not silently diverge
+        bad = engine_digest("qwen2.5-3b", True, METHOD, ecfg, seed=1,
+                            n_slots=4, cache_len=48,
+                            verdict_batch=False)
+        conn = _dial(server)
+        conn.send_json(MSG_HELLO, {"proto": PROTO_VERSION,
+                                   "session": "difftest-lockstep",
+                                   "cell": 0, "config": bad})
+        with pytest.raises(TransportError, match="mismatch"):
+            conn.recv_expect(MSG_HELLO_OK)
+        conn.close()
+    finally:
+        server.stop()
