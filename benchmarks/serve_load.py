@@ -76,6 +76,7 @@ from repro.core import bits as rbits
 from repro.core.channel import ChannelConfig
 from repro.core.pages import pages_for
 from repro.models import init_params
+from repro.obs import DecompTracker, Obs
 from repro.serve import (ServeConfig, ServeSession, TraceConfig,
                          poisson_trace)
 
@@ -188,7 +189,11 @@ def pipeline_study(pair, n_requests, max_batch, prompt_len, min_new,
     """Lockstep vs event-driven pipelined serving on the SAME trace with
     the SAME calibrated compute costs, over the paper's default 1 Mbit/s
     uplink (ChannelConfig defaults).  Token streams must be identical;
-    mean end-to-end latency must be strictly lower pipelined."""
+    mean end-to-end latency must be strictly lower pipelined.  Both legs
+    run with the observability layer live (obs never perturbs tokens —
+    the streams_identical gate would catch it): the JSON carries each
+    leg's metrics counters and, on the lockstep leg, the Theorem-1
+    rejection decomposition + conformal coverage snapshot."""
     dc, dp, tc, tp = pair
     channel = ChannelConfig()          # 1 Mbit/s up, the paper's regime
     trace_cfg = TraceConfig(
@@ -199,11 +204,17 @@ def pipeline_study(pair, n_requests, max_batch, prompt_len, min_new,
            "n_requests": n_requests, "max_batch": max_batch}
     streams = {}
     for pipeline in ("lockstep", "pipelined"):
-        eng = EdgeCloudEngine(dc, dp, tc, tp, method, ecfg, channel,
-                              seed=0)
+        obs = Obs.on(decomp=DecompTracker(method.alpha, method.eta,
+                                          method.ell)
+                     if pipeline == "lockstep" else None)
+        eng = EdgeCloudEngine(
+            dc, dp, tc, tp, method,
+            dataclasses.replace(ecfg,
+                                collect_theory=obs.decomp is not None),
+            channel, seed=0)
         sess = ServeSession(eng, ServeConfig(
             max_batch=max_batch, cache_len=cache_len, pipeline=pipeline,
-            t_slm_s=t_slm, t_llm_s=t_llm))
+            t_slm_s=t_slm, t_llm_s=t_llm), obs=obs)
         rep = sess.run_trace(poisson_trace(trace_cfg))
         streams[pipeline] = {r.rid: tuple(r.tokens) for r in rep.requests}
         out[pipeline] = {
@@ -219,7 +230,16 @@ def pipeline_study(pair, n_requests, max_batch, prompt_len, min_new,
             "n_spec_hits": rep.n_spec_hits,
             "n_spec_misses": rep.n_spec_misses,
             "n_finished": rep.n_finished,
+            "obs": {"trace_events": obs.tracer.n_events,
+                    "counters": obs.metrics.snapshot()["counters"]},
         }
+        if obs.decomp is not None:
+            rec_ok, rec_err = obs.decomp.reconcile()
+            out[pipeline]["obs"]["decomp"] = {
+                "reconcile_ok": bool(rec_ok),
+                "reconcile_max_err": float(rec_err),
+                "coverage": obs.decomp.coverage(),
+            }
     lk, pp = out["lockstep"], out["pipelined"]
     out["verdict"] = {
         "streams_identical": streams["lockstep"] == streams["pipelined"],

@@ -83,12 +83,18 @@ class SharedLink:
         self.busy_total_s = 0.0
         self.payload_bits_total = 0.0   # excludes per-message framing
         self.n_msgs = 0
+        # backlog telemetry (read by obs.snapshot_topology): how often
+        # and how badly messages queued behind earlier transmissions
+        self.n_delayed = 0              # transmits with wait_s > 0
+        self.peak_backlog_s = 0.0       # worst head-of-line wait seen
 
     def reset(self):
         self.busy_until_s = 0.0
         self.busy_total_s = 0.0
         self.payload_bits_total = 0.0
         self.n_msgs = 0
+        self.n_delayed = 0
+        self.peak_backlog_s = 0.0
 
     @property
     def bits_total(self) -> float:
@@ -106,8 +112,12 @@ class SharedLink:
         self.busy_total_s += dur
         self.payload_bits_total += bits
         self.n_msgs += 1
-        return Transmission(start, end, end + self.ch.rtt_s / 2,
-                            start - now_s)
+        wait = start - now_s
+        if wait > 0.0:
+            self.n_delayed += 1
+            if wait > self.peak_backlog_s:
+                self.peak_backlog_s = wait
+        return Transmission(start, end, end + self.ch.rtt_s / 2, wait)
 
     def utilization(self, horizon_s: float) -> float:
         """Fraction of [0, horizon] the link spent serialising bits.

@@ -1171,6 +1171,9 @@ class EdgeCloudEngine(EdgeEngineBase):
             "t_down": t_down,
             "t_total": db.t_slm + t_up + vb.t_llm + t_down,
             "tokens_out": np.where(active, 1 + T_np, 0),
+            # pre-round conformal thresholds per row — the beta
+            # trajectory obs.decomp tracks across rounds
+            "beta_row": db.betas[0].copy(),
         }
         if self.paged:
             metrics["pages_in_use"] = self.alloc.pages_in_use
@@ -1183,6 +1186,7 @@ class EdgeCloudEngine(EdgeEngineBase):
             metrics["p"] = vb.p
             metrics["dropped_seq"] = db.dropped
             metrics["K_seq"] = db.Ks
+            metrics["live_seq"] = live_np.copy()
         return metrics
 
     # ------------------------------------------------------------------

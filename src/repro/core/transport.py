@@ -41,6 +41,10 @@ per-cell ``SharedLink`` isolation):
     ERROR            — JSON {"error": reason}; the sender closes the
         connection right after.
     BYE              — clean shutdown of one connection.
+    STATS            — JSON request/response (empty-object request): the
+        edge pulls the server's metrics snapshot (frame counters, decode
+        errors, measured verify-time stats) over the same connection.
+        Observability only — the reply never feeds the token path.
 """
 from __future__ import annotations
 
@@ -59,6 +63,7 @@ MSG_VERIFY = 4
 MSG_VERDICTS = 5
 MSG_ERROR = 6
 MSG_BYE = 7
+MSG_STATS = 8
 
 _LEN = struct.Struct(">I")
 _U16 = struct.Struct(">H")

@@ -19,10 +19,9 @@ bound port for scripts (the CI transport-smoke job polls it).
 from __future__ import annotations
 
 import argparse
+import logging
 import signal
 import sys
-
-from repro.serve.net import CloudServer
 
 
 def main():
@@ -35,7 +34,17 @@ def main():
                          "once listening")
     ap.add_argument("--io-timeout-s", type=float, default=300.0,
                     help="per-connection socket timeout")
+    ap.add_argument("--log-level", default="info",
+                    choices=["debug", "info", "warning", "error"],
+                    help="logging threshold for the server "
+                         "(repro.serve.net logs decode errors at "
+                         "error, dropped connections at debug)")
     args = ap.parse_args()
+    logging.basicConfig(
+        level=getattr(logging, args.log_level.upper()),
+        format="[cloud] %(levelname)s %(name)s: %(message)s")
+
+    from repro.serve.net import CloudServer
 
     server = CloudServer(host=args.host, port=args.port,
                          io_timeout_s=args.io_timeout_s)
@@ -45,15 +54,23 @@ def main():
         with open(args.port_file, "w") as f:
             f.write(str(server.port))
 
-    def _term(signum, frame):
+    def _shutdown(why: str):
         server.stop()
+        snap = server.stats_snapshot()["counters"]
+        print(f"[cloud] shutting down ({why}): "
+              f"{snap.get('cloud.verify_rpcs', 0)} verify RPCs, "
+              f"{snap.get('cloud.wire_decode_errors', 0)} decode errors",
+              flush=True)
+
+    def _term(signum, frame):
+        _shutdown("SIGTERM")
         sys.exit(0)
 
     signal.signal(signal.SIGTERM, _term)
     try:
         server.serve_forever()
     except KeyboardInterrupt:
-        server.stop()
+        _shutdown("KeyboardInterrupt")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig, summarize
 from repro.core.channel import ChannelConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params
+from repro.obs import DecompTracker, Obs, span_names_by_clock
 from repro.serve import (ServeConfig, ServeSession, TraceConfig,
                          poisson_trace)
 from repro.train import checkpoint
@@ -48,7 +49,66 @@ def load_or_init(cfg, ckpt, seed):
     return init_params(cfg, jax.random.PRNGKey(seed))
 
 
-def run_tcp_vs_sim(args, tc, dc, dp, sim_rep, cache_len):
+def build_obs(args) -> Obs:
+    """Obs bundle for --trace-out/--metrics-out runs.  The Theorem-1
+    decomposition needs the dense collect_theory arrays, which only the
+    lockstep simulator round emits — pipelined runs still get spans,
+    counters and coverage-free telemetry."""
+    decomp = None
+    if args.pipeline == "lockstep":
+        decomp = DecompTracker(args.alpha, args.eta, args.ell)
+    return Obs.on(decomp=decomp)
+
+
+def finish_obs(args, obs: Obs, tcp: bool):
+    """Export the trace/metrics artifacts and gate on the obs
+    invariants: required round-phase spans per clock, and the per-round
+    rejection telemetry reconciling with ``core.theory.thm1_terms``."""
+    if obs is None:
+        return
+    failures = []
+    if args.trace_out:
+        obs.tracer.export(args.trace_out)
+        names = span_names_by_clock(obs.tracer.chrome_trace())
+        missing = {"draft", "uplink", "verify",
+                   "downlink"} - names.get("modeled", set())
+        if missing:
+            failures.append(
+                f"modeled clock missing spans {sorted(missing)}")
+        if tcp:
+            wmissing = {"draft", "verify_rpc"} - names.get("wall", set())
+            if wmissing:
+                failures.append(
+                    f"wall clock missing spans {sorted(wmissing)}")
+        print(f"  obs  trace: {obs.tracer.n_events} events -> "
+              f"{args.trace_out}")
+    if args.metrics_out:
+        snap = obs.metrics.snapshot()
+        if obs.decomp is not None:
+            snap["decomp"] = obs.decomp.snapshot()
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"  obs  metrics -> {args.metrics_out}")
+    if obs.decomp is not None:
+        ok, err = obs.decomp.reconcile()
+        if not ok:
+            failures.append(
+                f"thm1 decomposition does not reconcile "
+                f"(max |mismatch+dropped+lattice - bound| = {err:.3g})")
+        cov = obs.decomp.coverage()
+        print(f"  obs  thm1 per-round terms reconcile "
+              f"(max err {err:.3g}); conformal dropped mass "
+              f"{cov['mean_dropped']:.3g} vs alpha={cov['alpha']:.3g} "
+              f"over {cov['n_positions']} positions")
+    if failures:
+        for msg in failures:
+            print(f"[FAIL-OBS] {msg}")
+        raise SystemExit(1)
+    print("[PASS-OBS] trace/metrics artifacts valid: round-phase spans "
+          "present, rejection telemetry reconciles with thm1_terms")
+
+
+def run_tcp_vs_sim(args, tc, dc, dp, sim_rep, cache_len, obs=None):
     """Replay the SAME seeded trace over real sockets, with the
     simulated run as differential oracle: token streams must be
     bit-identical (the transport moves bytes, never tokens), while the
@@ -88,7 +148,7 @@ def run_tcp_vs_sim(args, tc, dc, dp, sim_rep, cache_len):
         client = EdgeClient(dc, dp, method, ecfg, cfg,
                             arch=args.arch, smoke=args.smoke,
                             host=args.cloud_host, port=port,
-                            seed=args.seed)
+                            seed=args.seed, obs=obs)
         with client:
             net_rep = client.run_trace(trace)
     finally:
@@ -110,6 +170,11 @@ def run_tcp_vs_sim(args, tc, dc, dp, sim_rep, cache_len):
           f"p95={s['rpc_round_s']['p95']*1e3:.2f}ms")
     print(f"  tcp  verify (server) mean={s['t_llm_s']['mean']*1e3:.2f}ms"
           f"  draft (edge) mean={s['t_slm_s']['mean']*1e3:.2f}ms")
+    if net_rep.cloud_stats is not None:
+        c = net_rep.cloud_stats.get("counters", {})
+        print(f"  tcp  cloud stats: "
+              f"{c.get('cloud.verify_rpcs', 0)} verify RPCs, "
+              f"{c.get('cloud.wire_decode_errors', 0)} decode errors")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"sim": sim_rep.summary(), "tcp": s,
@@ -118,6 +183,7 @@ def run_tcp_vs_sim(args, tc, dc, dp, sim_rep, cache_len):
     if tcp_streams == sim_streams:
         print(f"[PASS-TRANSPORT] tcp == sim: {len(tcp_streams)} streams "
               f"bit-identical over real sockets")
+        finish_obs(args, obs, tcp=True)
         return
     bad = [rid for rid in sorted(set(sim_streams) | set(tcp_streams))
            if sim_streams.get(rid) != tcp_streams.get(rid)]
@@ -208,6 +274,17 @@ def main():
                     help="tcp transport: CloudServer port (0 = spawn an "
                          "in-process threaded server on an ephemeral "
                          "port)")
+    ap.add_argument("--trace-out", default="",
+                    help="trace mode: write a Chrome-trace-event JSON "
+                         "of the run's round phases (open in "
+                         "ui.perfetto.dev); sim rounds land on the "
+                         "'modeled clock' process, tcp RPCs on the "
+                         "'wall clock' process")
+    ap.add_argument("--metrics-out", default="",
+                    help="trace mode: write the metrics registry "
+                         "snapshot (counters/gauges/histograms, plus "
+                         "the Theorem-1 rejection decomposition when "
+                         "pipeline=lockstep) as JSON")
     ap.add_argument("--cache-len", type=int, default=0,
                     help="per-slot cache capacity (0 = auto)")
     ap.add_argument("--page-size", type=int, default=0,
@@ -219,6 +296,10 @@ def main():
     args = ap.parse_args()
     if args.transport == "tcp" and not args.trace:
         ap.error("--transport tcp requires --trace")
+    if (args.trace_out or args.metrics_out) and not args.trace:
+        ap.error("--trace-out/--metrics-out require --trace")
+    obs = build_obs(args) if (args.trace_out or args.metrics_out) \
+        else None
 
     tc = configs.get_config(args.arch)
     if args.smoke:
@@ -234,7 +315,10 @@ def main():
         EngineConfig(L_max=args.L_max, bit_budget=args.bit_budget,
                      temperature=args.temperature,
                      wire_codec=args.wire_codec,
-                     budget_model=args.budget_model),
+                     budget_model=args.budget_model,
+                     # dense q/p arrays for the Theorem-1 decomposition;
+                     # records only — tokens are unaffected
+                     collect_theory=bool(obs and obs.decomp)),
         ChannelConfig(uplink_bps=args.uplink_bps,
                       downlink_bps=args.downlink_mbps * 1e6),
         seed=args.seed)
@@ -256,10 +340,11 @@ def main():
             pipeline=args.pipeline,
             speculate=not args.no_speculate,
             n_cells=args.cells,
-            verdict_batch=args.verdict_batch))
+            verdict_batch=args.verdict_batch), obs=obs)
         rep = sess.run_trace(trace)
         if args.transport == "tcp":
-            return run_tcp_vs_sim(args, tc, dc, dp, rep, cache_len)
+            return run_tcp_vs_sim(args, tc, dc, dp, rep, cache_len,
+                                  obs=obs)
         kv = (f"paged({args.page_size}-tok pages)" if args.page_size
               else "dense")
         print(f"[serve --trace] {tc.name} <- {dc.name}  "
@@ -277,6 +362,7 @@ def main():
             with open(args.json, "w") as f:
                 json.dump({"report": rep.summary(), "args": vars(args)},
                           f, indent=1)
+        finish_obs(args, obs, tcp=False)
         return
 
     data = SyntheticLM(DataConfig(vocab=tc.vocab, seed=77))

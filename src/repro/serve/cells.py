@@ -138,6 +138,14 @@ class CellTopology:
     def n_preemptions(self) -> int:
         return sum(c.sched.n_preemptions for c in self.cells)
 
+    @property
+    def n_submitted(self) -> int:
+        return sum(c.sched.n_submitted for c in self.cells)
+
+    @property
+    def n_admitted(self) -> int:
+        return sum(c.sched.n_admitted for c in self.cells)
+
     def has_work(self) -> bool:
         return any(c.sched.has_work() for c in self.cells)
 

@@ -60,6 +60,7 @@ import itertools
 from typing import Dict, List, Optional
 
 from repro.core.engine import PendingRound, SpecDraft
+from repro.obs import CLOCK_MODELED, NULL_OBS, Obs
 from repro.serve.request import Request
 
 ARRIVAL = "arrival"
@@ -130,7 +131,8 @@ class RoundStateMachine:
     seconds in the simulator, wall-clock seconds over sockets); they
     feed request METRICS only, never token decisions."""
 
-    def __init__(self, eng, sched, speculate: bool, cache_len: int):
+    def __init__(self, eng, sched, speculate: bool, cache_len: int,
+                 obs: Optional[Obs] = None, clock: str = CLOCK_MODELED):
         self.eng = eng
         self.sched = sched
         self.speculate = speculate
@@ -139,6 +141,11 @@ class RoundStateMachine:
         self.n_drafts = 0
         self.n_spec_hits = 0
         self.n_spec_misses = 0
+        # observability: counters + speculation instants on the caller's
+        # clock ("modeled" in the simulator, "wall" over sockets).  The
+        # instruments only ever SEE state; they never steer it.
+        self.obs = obs if obs is not None else NULL_OBS
+        self.clock = clock
 
     # -- admission ------------------------------------------------------
     def cache_need(self, req: Request) -> int:
@@ -172,6 +179,7 @@ class RoundStateMachine:
     def draft(self, slot: int) -> PendingRound:
         rec = self.eng.draft_slots([slot])[slot]
         self.n_drafts += 1
+        self.obs.metrics.counter("serve.drafts").inc()
         self.slots[slot].rec = rec
         return rec
 
@@ -181,6 +189,7 @@ class RoundStateMachine:
         identical to per-slot drafting."""
         recs = self.eng.draft_slots(list(slots))
         self.n_drafts += len(recs)
+        self.obs.metrics.counter("serve.drafts").inc(len(recs))
         for s, rec in recs.items():
             self.slots[s].rec = rec
         return recs
@@ -199,6 +208,7 @@ class RoundStateMachine:
         spec = self.eng.draft_speculative_slot(slot, rec)
         if spec is not None:
             self.n_drafts += 1
+            self.obs.metrics.counter("serve.spec_drafts").inc()
             ctx.spec = spec
         return spec
 
@@ -225,12 +235,18 @@ class RoundStateMachine:
                                   finished=True, spec_round=None)
         if hit:
             self.n_spec_hits += 1
+            self.obs.metrics.counter("serve.spec_hits").inc()
+            self.obs.tracer.instant("spec_hit", now, clock=self.clock,
+                                    tid=f"slot{slot}")
             self.eng.commit_speculative(spec)
             ctx.rec = spec.round     # the confirmed round is now in flight
             return VerdictOutcome(req=req, emitted=emitted,
                                   finished=False, spec_round=spec.round)
         if spec is not None:
             self.n_spec_misses += 1   # abort is free (cancelled work)
+            self.obs.metrics.counter("serve.spec_misses").inc()
+            self.obs.tracer.instant("spec_abort", now, clock=self.clock,
+                                    tid=f"slot{slot}")
         return VerdictOutcome(req=req, emitted=emitted,
                               finished=False, spec_round=None)
 
@@ -256,9 +272,10 @@ class EventDrivenLoop:
         self._queue = EventQueue()
         self.cloud_busy_until = 0.0
         self.cloud_queue: List[int] = []
+        self.obs = sess.obs
         self.rsm = RoundStateMachine(self.eng, self.sched,
                                      cfg_speculate(sess.cfg),
-                                     sess.cache_len)
+                                     sess.cache_len, obs=sess.obs)
         self.slots = self.rsm.slots
         self.reserved_pages = 0
         self.n_verify_batches = 0
@@ -346,8 +363,10 @@ class EventDrivenLoop:
     # -- edge -----------------------------------------------------------
     def _start_draft(self, slot: int):
         rec = self.rsm.draft(slot)
-        self._push(self.now + self._dur_slm(rec.t_slm), EDGE_DONE,
-                   (slot, rec))
+        t_done = self.now + self._dur_slm(rec.t_slm)
+        self.obs.tracer.span("draft", self.now, t_done,
+                             tid=f"slot{slot}")
+        self._push(t_done, EDGE_DONE, (slot, rec))
 
     def _on_edge_done(self, data):
         slot, rec = data
@@ -356,15 +375,23 @@ class EventDrivenLoop:
         tx = self.topo.cell_of_slot(slot).uplink.transmit(
             self.now, rec.wire_bits)
         ctx.req.uplink_wait_s += tx.wait_s
+        self.obs.tracer.span("uplink", self.now, tx.arrive_s,
+                             tid=f"slot{slot}",
+                             args={"wait_s": tx.wait_s,
+                                   "bits": rec.wire_bits})
         self._push(tx.arrive_s, UPLINK_ARRIVE, slot)
         # the edge device is idle until the verdict returns: draft ahead
         spec = self.rsm.speculate_after(slot, rec)
         if spec is not None:
             ctx.spec_ready_s = self.now + self._dur_slm(spec.round.t_slm)
+            self.obs.tracer.span("spec_draft", self.now, ctx.spec_ready_s,
+                                 tid=f"slot{slot}")
 
     # -- uplink / cloud -------------------------------------------------
     def _on_uplink_arrive(self, slot: int):
         self.cloud_queue.append(slot)
+        self.obs.metrics.gauge("serve.cloud.queue_depth").set(
+            len(self.cloud_queue))
         if self.now >= self.cloud_busy_until:
             self._start_verify()
 
@@ -375,6 +402,11 @@ class EventDrivenLoop:
         self.n_verify_batches += 1
         done = self.now + self._dur_llm(vb.t_llm)
         self.cloud_busy_until = done
+        self.obs.tracer.span("verify", self.now, done, tid="cloud",
+                             args={"n_slots": len(batch)})
+        self.obs.metrics.histogram(
+            "serve.verify.batch_size",
+            bounds=(1, 2, 4, 8, 16, 32)).observe(len(batch))
         self._push(done, VERIFY_DONE, (batch, vb))
 
     def _on_verify_done(self, data):
@@ -389,6 +421,9 @@ class EventDrivenLoop:
                 frame = self.eng.pack_verdict_batch(
                     {s: vb.verdicts[s] for s in slots})
                 tx = cell.downlink.transmit(self.now, len(frame) * 8)
+                self.obs.tracer.span("downlink", self.now, tx.arrive_s,
+                                     tid=f"cell{cell.cell_id}",
+                                     args={"slots": list(slots)})
                 self._push(tx.arrive_s, DOWNLINK_ARRIVE,
                            ("frame", frame))
             else:
@@ -400,6 +435,10 @@ class EventDrivenLoop:
                         slot, vb.verdicts[slot])
                     tx = cell.downlink.transmit(self.now,
                                                 len(data_v) * 8)
+                    self.obs.tracer.span("downlink", self.now,
+                                         tx.arrive_s,
+                                         tid=f"cell{cell.cell_id}",
+                                         args={"slots": [slot]})
                     self._push(tx.arrive_s, DOWNLINK_ARRIVE,
                                ("verdict", (slot, data_v)))
         if self.cloud_queue:                 # work queued while busy

@@ -43,6 +43,7 @@ admitted.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import selectors
 import socket
 import threading
@@ -57,14 +58,27 @@ from repro.core import wire as wire_mod
 from repro.core.engine import (CloudVerifyEngine, EdgeEngineBase,
                                EngineConfig, MethodConfig)
 from repro.core.transport import (MSG_ADMIT, MSG_BYE, MSG_ERROR,
-                                  MSG_HELLO, MSG_HELLO_OK, MSG_VERDICTS,
-                                  MSG_VERIFY, PROTO_VERSION, Conn,
-                                  TransportError)
+                                  MSG_HELLO, MSG_HELLO_OK, MSG_STATS,
+                                  MSG_VERDICTS, MSG_VERIFY, PROTO_VERSION,
+                                  Conn, TransportError)
+from repro.obs import CLOCK_WALL, NULL_OBS, MetricsRegistry, Obs, \
+    summary_stats
 from repro.serve.cells import CellTopology
 from repro.serve.events import RoundStateMachine
 from repro.serve.request import Request
 
 IO_TIMEOUT_S = 120.0
+
+log = logging.getLogger("repro.serve.net")
+
+_MSG_NAMES = {MSG_HELLO: "hello", MSG_HELLO_OK: "hello_ok",
+              MSG_ADMIT: "admit", MSG_VERIFY: "verify",
+              MSG_VERDICTS: "verdicts", MSG_ERROR: "error",
+              MSG_BYE: "bye", MSG_STATS: "stats"}
+
+
+def _msg_name(kind: int) -> str:
+    return _MSG_NAMES.get(kind, f"unknown_{kind}")
 
 
 def engine_digest(arch: str, smoke: bool, method: MethodConfig,
@@ -137,6 +151,20 @@ class CloudServer:
         self._threads: List[threading.Thread] = []
         self._accept_thread: Optional[threading.Thread] = None
         self._stopping = False
+        # server-side metrics: per-frame-type counters, decode errors,
+        # measured verify time.  Always on (the server has no token path
+        # to perturb); the edge pulls a snapshot with a STATS frame.
+        self.metrics = MetricsRegistry(enabled=True)
+        self._metrics_lock = threading.Lock()
+
+    def _count(self, name: str, n: int = 1):
+        """Thread-safe counter bump (one connection thread per cell)."""
+        with self._metrics_lock:
+            self.metrics.counter(name).inc(n)
+
+    def stats_snapshot(self) -> dict:
+        with self._metrics_lock:
+            return self.metrics.snapshot()
 
     # -- lifecycle ------------------------------------------------------
     def start(self) -> "CloudServer":
@@ -206,30 +234,47 @@ class CloudServer:
     def _serve_conn(self, sock: socket.socket):
         conn = Conn(sock, timeout_s=self.io_timeout_s)
         try:
+            peer = "%s:%d" % sock.getpeername()[:2]
+        except OSError:
+            peer = "?"
+        kind = MSG_HELLO
+        try:
             sess = self._handshake(conn)
             if sess is None:
                 return
+            self._count("cloud.frames.hello")
             while True:
                 kind, body = conn.recv()
+                self._count(f"cloud.frames.{_msg_name(kind)}")
                 if kind == MSG_BYE:
                     return
                 if kind == MSG_ADMIT:
                     self._on_admit(sess, tp_mod.decode_json(body))
                 elif kind == MSG_VERIFY:
                     self._on_verify(sess, conn, body)
+                elif kind == MSG_STATS:
+                    conn.send_json(MSG_STATS, self.stats_snapshot())
                 else:
                     conn.send_json(MSG_ERROR, {
                         "error": f"unexpected message type {kind}"})
                     return
         except wire_mod.WireDecodeError as e:
-            # corrupt payload inside a well-formed frame: tell the peer
-            # why, then drop the connection — never verify garbage
+            # corrupt payload inside a well-formed frame: count + log
+            # (so the failure is observable even if the peer is gone),
+            # tell the peer why, then drop the connection — never
+            # verify garbage.  The server itself stays up.
+            self._count("cloud.wire_decode_errors")
+            log.error("wire decode error from %s in %s frame: %s",
+                      peer, _msg_name(kind), e)
             try:
                 conn.send_json(MSG_ERROR, {"error": f"wire decode: {e}"})
             except OSError:
                 pass
-        except (TransportError, OSError):
-            pass                            # peer went away: just clean up
+        except (TransportError, OSError) as e:
+            # peer went away / malformed framing: count, then clean up
+            self._count("cloud.transport_errors")
+            log.debug("connection from %s dropped in %s frame: %s",
+                      peer, _msg_name(kind), e)
         finally:
             conn.close()
 
@@ -264,6 +309,10 @@ class CloudServer:
                     for s, v in sorted(vb.verdicts.items())]
                 reply = tp_mod.pack_verdicts_body(vb.t_llm,
                                                   verdicts=packed)
+        with self._metrics_lock:
+            self.metrics.counter("cloud.verify_rpcs").inc()
+            self.metrics.counter("cloud.verify_slots").inc(len(items))
+            self.metrics.histogram("cloud.t_llm_s").observe(vb.t_llm)
         conn.send(MSG_VERDICTS, reply)
 
 
@@ -291,20 +340,12 @@ class EdgeTransportEngine(EdgeEngineBase):
         self.admit_cb(slot, np.asarray(prompt), seed, wire_codec)
 
 
-def _stats(xs: List[float]) -> dict:
-    if not xs:
-        return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "n": 0}
-    a = np.asarray(xs, np.float64)
-    return {"mean": float(a.mean()),
-            "p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95)),
-            "n": int(a.size)}
-
-
 @dataclasses.dataclass
 class NetReport:
     """One tcp run: the streams (for the differential oracle) plus
-    MEASURED wall-clock latency — no modeled channel anywhere."""
+    MEASURED wall-clock latency — no modeled channel anywhere.  The
+    latency dicts are ``obs.metrics.summary_stats`` records (one
+    implementation shared with the simulator's report percentiles)."""
     n_total: int
     n_finished: int
     n_rejected: int
@@ -317,6 +358,9 @@ class NetReport:
     t_llm_s: dict              # server-measured verify wall-clock
     t_slm_s: dict              # client-measured draft wall-clock
     requests: List[Request]
+    # server metrics snapshot pulled with a STATS frame at end of run
+    # (None when the pull failed — observability must not fail the run)
+    cloud_stats: Optional[dict] = None
 
     def streams(self) -> Dict[int, Tuple[int, ...]]:
         return {r.rid: tuple(r.tokens) for r in self.requests}
@@ -337,10 +381,14 @@ class EdgeClient:
                  engine: EngineConfig, cfg, arch: str, smoke: bool,
                  host: str, port: int, seed: int = 0,
                  session_id: Optional[str] = None,
-                 io_timeout_s: float = IO_TIMEOUT_S):
+                 io_timeout_s: float = IO_TIMEOUT_S,
+                 obs: Optional[Obs] = None):
         assert cfg.page_size == 0, "tcp transport serves dense slots only"
         assert cfg.cache_len > 0, "resolve cache_len before EdgeClient"
         self.cfg = cfg
+        # wall-clock spans + client-side counters; pass the SAME Obs the
+        # sim oracle used and one trace carries both clocks side by side
+        self.obs = obs if obs is not None else NULL_OBS
         self.arch, self.smoke, self.seed = arch, smoke, seed
         self.host, self.port = host, port
         self.io_timeout_s = io_timeout_s
@@ -426,7 +474,7 @@ class EdgeClient:
         rsm = RoundStateMachine(
             self.engine, self.sched,
             self.cfg.speculate and self.cfg.pipeline == "pipelined",
-            self.cfg.cache_len)
+            self.cfg.cache_len, obs=self.obs, clock=CLOCK_WALL)
         self._rpc_s: List[float] = []
         self._t_llm: List[float] = []
         self._t_slm: List[float] = []
@@ -440,24 +488,44 @@ class EdgeClient:
         assert self.sched.n_active == 0 and not self.sched.waiting
         requests = sorted(self.sched.finished + self.sched.rejected,
                           key=lambda r: r.rid)
+        cloud_stats = None
+        if self.obs.enabled:
+            try:
+                cloud_stats = self.fetch_cloud_stats()
+            except (TransportError, OSError) as e:
+                log.warning("STATS pull failed: %s", e)
         return NetReport(
             n_total=len(trace), n_finished=len(self.sched.finished),
             n_rejected=len(self.sched.rejected), makespan_s=clock(),
             n_verify_rpcs=self._n_rpcs, n_drafts=rsm.n_drafts,
             n_spec_hits=rsm.n_spec_hits,
             n_spec_misses=rsm.n_spec_misses,
-            rpc_round_s=_stats(self._rpc_s),
-            t_llm_s=_stats(self._t_llm), t_slm_s=_stats(self._t_slm),
-            requests=requests)
+            rpc_round_s=summary_stats(self._rpc_s),
+            t_llm_s=summary_stats(self._t_llm),
+            t_slm_s=summary_stats(self._t_slm),
+            requests=requests, cloud_stats=cloud_stats)
+
+    def fetch_cloud_stats(self) -> dict:
+        """Pull the server's metrics snapshot over the first cell's
+        connection (STATS request/response) — observability only; the
+        reply never feeds the token path."""
+        assert self._conns, "connect() before fetch_cloud_stats()"
+        conn = self._conns[0]
+        conn.send_json(MSG_STATS, {})
+        return tp_mod.decode_json(conn.recv_expect(MSG_STATS))
 
     # -- lockstep: one barrier round per iteration ----------------------
     def _run_lockstep(self, rsm: RoundStateMachine, clock):
+        tr = self.obs.tracer
         while self.sched.has_work():
             rsm.admit_ready(clock())
             slots = sorted(rsm.slots)
             assert slots, "has_work() but nothing admitted"
+            t_draft = clock()
             recs = rsm.draft_many(slots)
             self._t_slm.append(recs[slots[0]].t_slm)  # one batched draft
+            tr.span("draft", t_draft, clock(), clock=CLOCK_WALL,
+                    tid="edge", args={"n_slots": len(slots)})
             t_send = clock()
             groups = self.topo.slot_groups(slots)
             for cell, cslots in groups:
@@ -471,7 +539,11 @@ class EdgeClient:
                     self._conns[cell.cell_id])
                 self._t_llm.append(t_llm)
                 verdicts.update(dict(pairs))
-            self._rpc_s.append(clock() - t_send)
+            rpc = clock() - t_send
+            self._rpc_s.append(rpc)
+            tr.span("verify_rpc", t_send, t_send + rpc, clock=CLOCK_WALL,
+                    tid="edge", args={"n_slots": len(slots)})
+            self.obs.metrics.histogram("edge.rpc_round_s").observe(rpc)
             for slot in slots:           # ascending slot order, like sim
                 rsm.apply_verdict(slot, verdicts[slot], clock())
 
@@ -481,6 +553,7 @@ class EdgeClient:
         for cell_id, conn in enumerate(self._conns):
             sel.register(conn.sock, selectors.EVENT_READ, cell_id)
         sent_at: Dict[int, float] = {}
+        tr = self.obs.tracer
 
         def send_round(slot, rec):
             self._conn_of_slot(slot).send(
@@ -491,8 +564,11 @@ class EdgeClient:
             rsm.speculate_after(slot, rec)
 
         def start_round(slot):
+            t0 = clock()
             rec = rsm.draft(slot)
             self._t_slm.append(rec.t_slm)
+            tr.span("draft", t0, clock(), clock=CLOCK_WALL,
+                    tid=f"slot{slot}")
             send_round(slot, rec)
 
         try:
@@ -508,7 +584,13 @@ class EdgeClient:
                     t_llm, pairs = self._recv_verdicts(conn)
                     self._t_llm.append(t_llm)
                     for slot, verdict in pairs:
-                        self._rpc_s.append(clock() - sent_at.pop(slot))
+                        t_sent = sent_at.pop(slot)
+                        now = clock()
+                        self._rpc_s.append(now - t_sent)
+                        tr.span("verify_rpc", t_sent, now,
+                                clock=CLOCK_WALL, tid=f"slot{slot}")
+                        self.obs.metrics.histogram(
+                            "edge.rpc_round_s").observe(now - t_sent)
                         out = rsm.apply_verdict(slot, verdict, clock())
                         if out.finished:
                             for s in rsm.admit_ready(clock()):

@@ -70,6 +70,9 @@ class Scheduler:
         self.finished: List[Request] = []
         self.rejected: List[Request] = []
         self.n_preemptions = 0
+        self.n_submitted = 0     # arrivals offered (admitted to queue or not)
+        self.n_admitted = 0      # queue -> slot transitions (re-admissions
+        #                          after preemption count again)
 
     # -- queries --------------------------------------------------------
     @property
@@ -101,6 +104,7 @@ class Scheduler:
         """Arrival.  Returns False (and marks REJECTED) when the waiting
         room is full."""
         assert req.state == RequestState.QUEUED
+        self.n_submitted += 1
         if len(self.waiting) >= self.cfg.queue_cap:
             self.reject(req)
             return False
@@ -128,6 +132,7 @@ class Scheduler:
             req.slot = slot
             req.t_admit = now
             self.slots[self._local[slot]] = req
+            self.n_admitted += 1
             admissions.append((slot, req))
         return admissions
 

@@ -69,6 +69,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.engine import EdgeCloudEngine
+from repro.obs import NULL_OBS, Obs, percentile, snapshot_topology
 from repro.serve.cells import CellTopology
 from repro.serve.request import Request
 
@@ -164,16 +165,16 @@ class ServeReport:
                 for f in dataclasses.fields(self) if f.name != "requests"}
 
 
-def _percentile(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs \
-        else float("nan")
-
-
 class ServeSession:
-    def __init__(self, engine: EdgeCloudEngine, cfg: ServeConfig):
+    def __init__(self, engine: EdgeCloudEngine, cfg: ServeConfig,
+                 obs: Optional[Obs] = None):
         assert cfg.pipeline in ("lockstep", "pipelined"), cfg.pipeline
         self.engine = engine
         self.cfg = cfg
+        # observability is read-only over the serving state: spans,
+        # counters and the Theorem-1 decomposition never feed back into
+        # scheduling or tokens (NULL_OBS = everything disabled)
+        self.obs = obs if obs is not None else NULL_OBS
         self.n_spec_hits = 0
         self.n_spec_misses = 0
         # the topology IS the scheduler: one cell degenerates to the
@@ -268,6 +269,7 @@ class ServeSession:
         if self.paged:
             self._grow_or_preempt()
         self.peak_active = max(self.peak_active, sched.n_active)
+        t_round0 = self.now
         groups = self.topo.slot_groups(
             r.slot for r in sched.active_requests)
         m = eng.run_round(
@@ -313,6 +315,24 @@ class ServeSession:
                     tx = cell.downlink.transmit(
                         verify_done, float(m["verdict_bits_row"][slot]))
                     self.now = max(self.now, tx.arrive_s)
+
+        # --- observability (read-only over m and the clock marks) ---
+        if self.obs.enabled:
+            tr = self.obs.tracer
+            if tr.enabled:
+                rd = {"round": self.n_rounds, "n_slots": len(by_slot)}
+                tr.span("draft", t_round0, edge_done, tid="lockstep",
+                        args=rd)
+                tr.span("uplink", edge_done, arrive, tid="lockstep")
+                tr.span("verify", arrive, verify_done, tid="lockstep")
+                tr.span("downlink", verify_done, self.now, tid="lockstep")
+            mx = self.obs.metrics
+            mx.counter("serve.rounds").inc()
+            mx.histogram("serve.t_slm_s").observe(t_slm)
+            mx.histogram("serve.t_llm_s").observe(t_llm)
+            mx.gauge("serve.active_slots").set(len(by_slot))
+            if self.obs.decomp is not None:
+                self.obs.decomp.observe_round(m)
 
         # --- token delivery + completion ---
         finished = []
@@ -364,6 +384,7 @@ class ServeSession:
         mk = self.now
         up_util = [c.uplink.utilization(mk) for c in self.topo.cells]
         down_util = [c.downlink.utilization(mk) for c in self.topo.cells]
+        snapshot_topology(self.obs.metrics, self.topo)
         return ServeReport(
             policy=self.cfg.policy,
             n_requests=n_total,
@@ -372,10 +393,10 @@ class ServeSession:
             makespan_s=mk,
             total_tokens=toks,
             throughput_tok_s=toks / mk if mk > 0 else 0.0,
-            latency_p50_s=_percentile(lats, 50),
-            latency_p90_s=_percentile(lats, 90),
-            latency_p95_s=_percentile(lats, 95),
-            latency_p99_s=_percentile(lats, 99),
+            latency_p50_s=percentile(lats, 50),
+            latency_p90_s=percentile(lats, 90),
+            latency_p95_s=percentile(lats, 95),
+            latency_p99_s=percentile(lats, 99),
             ttft_mean_s=float(np.mean([r.ttft_s for r in fin]))
             if fin else float("nan"),
             queue_wait_mean_s=float(np.mean([r.queue_wait_s

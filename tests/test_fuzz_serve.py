@@ -17,7 +17,10 @@ random traces:
     plus one true solo-engine run anchoring the reference itself;
   * the default sweep is a small deterministic rotation through the
     grid (every axis value appears; every seed includes a multi-cell
-    pipelined point); the ``slow`` marker widens it to the full grid.
+    pipelined point); the ``slow`` marker widens it to the full grid;
+  * every seed additionally replays one rotating grid point with the
+    observability layer fully live (span tracing, metrics, Theorem-1
+    decomposition) — obs must never perturb a single token.
 
 Alongside the differential sweep, this file pins the determinism
 substrate the serving loops rely on: the event queue's same-timestamp
@@ -32,6 +35,7 @@ from repro import configs
 from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig
 from repro.core.channel import ChannelConfig, SharedUplink
 from repro.models import init_params
+from repro.obs import DecompTracker, Obs
 from repro.serve import (CellTopology, EventQueue, Request, ServeConfig,
                          ServeSession, TraceConfig, poisson_trace)
 
@@ -86,22 +90,37 @@ def _fuzz_workload(pair, seed: int):
     return trace_cfg, overrides, channel
 
 
-def _run(pair, trace_cfg, overrides, channel, cells, pipe, codec, batch):
+def _run(pair, trace_cfg, overrides, channel, cells, pipe, codec, batch,
+         obs_on=False):
     dc, dp, tc, tp = pair
-    eng = EdgeCloudEngine(dc, dp, tc, tp, METHOD,
-                          EngineConfig(L_max=L_MAX, wire_codec=codec),
-                          channel, seed=0)
+    # decomposition is a lockstep feature (it feeds on run_round
+    # metrics); pipelined points get tracing + metrics only
+    obs = None
+    if obs_on:
+        obs = Obs.on(decomp=DecompTracker(METHOD.alpha, METHOD.eta,
+                                          METHOD.ell)
+                     if pipe == "lockstep" else None)
+    eng = EdgeCloudEngine(
+        dc, dp, tc, tp, METHOD,
+        EngineConfig(L_max=L_MAX, wire_codec=codec,
+                     collect_theory=bool(obs and obs.decomp)),
+        channel, seed=0)
     trace = poisson_trace(trace_cfg)
     for req, c in zip(trace, overrides):
         req.wire_codec = c
     rep = ServeSession(eng, ServeConfig(
         max_batch=MAX_BATCH, cache_len=64, pipeline=pipe,
         n_cells=cells, verdict_batch=batch,
-        t_slm_s=0.01, t_llm_s=0.02)).run_trace(trace)
+        t_slm_s=0.01, t_llm_s=0.02), obs=obs).run_trace(trace)
     assert rep.n_finished == trace_cfg.n_requests, \
         (cells, pipe, codec, batch)
     assert np.isfinite(rep.uplink_utilization)
     assert np.isfinite(rep.downlink_utilization)
+    if obs is not None:
+        assert obs.tracer.n_events > 0
+        if obs.decomp is not None:
+            ok, err = obs.decomp.reconcile()
+            assert ok, f"thm1 telemetry failed to reconcile ({err})"
     return {r.rid: tuple(r.tokens) for r in rep.requests}
 
 
@@ -131,6 +150,14 @@ def _differential(pair, seed: int, grid):
         assert streams == ref, \
             f"seed {seed}: {combo} diverged from the single-cell " \
             f"lockstep reference"
+    # obs axis: the same workload through one rotating grid point with
+    # tracing + metrics + decomposition live must not move a token
+    combo = grid[seed % len(grid)]
+    streams = _run(pair, trace_cfg, overrides, channel, *combo,
+                   obs_on=True)
+    assert streams == ref, \
+        f"seed {seed}: {combo} with observability on diverged from " \
+        f"the reference"
 
 
 @pytest.mark.parametrize("seed", [0, 1])

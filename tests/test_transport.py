@@ -7,6 +7,7 @@ never tokens).
 Every socket here binds port 0 (ephemeral) and carries a finite
 timeout, so a wedged peer fails loud instead of hanging the suite.
 """
+import logging
 import socket
 import struct
 import threading
@@ -21,9 +22,10 @@ from repro.core import transport as tp_mod
 from repro.core import EdgeCloudEngine, EngineConfig, MethodConfig
 from repro.core.channel import ChannelConfig
 from repro.core.transport import (MSG_ADMIT, MSG_BYE, MSG_HELLO,
-                                  MSG_HELLO_OK, MSG_VERIFY, Conn,
-                                  PROTO_VERSION, TransportError,
-                                  recv_frame, send_frame)
+                                  MSG_HELLO_OK, MSG_STATS, MSG_VERDICTS,
+                                  MSG_VERIFY, Conn, PROTO_VERSION,
+                                  TransportError, recv_frame, send_frame)
+from repro.obs import CLOCK_MODELED, CLOCK_WALL, Obs, span_names_by_clock
 from repro.core.wire import (DraftPayload, VerdictPayload,
                              WireDecodeError, WireFormat)
 from repro.models import init_params
@@ -266,8 +268,10 @@ def test_tcp_streams_match_simulator(pair):
     """The PR's core guarantee: a seeded 2-cell trace served over real
     sockets is bit-identical to the simulated run, lockstep AND
     pipelined (with speculation), v1 and v2 wire, verdict batching on
-    the lockstep leg.  Also pins the digest-mismatch rejection against
-    the live session."""
+    the lockstep leg — with the obs tracer live on BOTH legs (zero
+    perturbation over a real socket: one shared trace carries the
+    simulator's modeled clock and the client's wall clock).  Also pins
+    the digest-mismatch rejection against the live session."""
     dc, dp, tc, tp = pair
     ecfg = EngineConfig(L_max=L_MAX, bit_budget=4000.0)
     trace_cfg = TraceConfig(n_requests=4, rate_rps=12.0, prompt_len=8,
@@ -277,6 +281,7 @@ def test_tcp_streams_match_simulator(pair):
     try:
         for pipeline, codec in (("lockstep", "v1"),
                                 ("pipelined", "v2")):
+            obs = Obs.on()
             cfg_kw = dict(max_batch=4, cache_len=48, n_cells=2,
                           pipeline=pipeline,
                           verdict_batch=(pipeline == "lockstep"))
@@ -285,8 +290,8 @@ def test_tcp_streams_match_simulator(pair):
             eng = EdgeCloudEngine(dc, dp, tc, tp, METHOD, ec,
                                   ChannelConfig(), seed=0)
             sim = ServeSession(eng, ServeConfig(
-                t_slm_s=0.01, t_llm_s=0.02, **cfg_kw)).run_trace(
-                poisson_trace(trace_cfg))
+                t_slm_s=0.01, t_llm_s=0.02, **cfg_kw),
+                obs=obs).run_trace(poisson_trace(trace_cfg))
             sim_streams = {r.rid: tuple(r.tokens)
                            for r in sim.requests}
             client = EdgeClient(dc, dp, METHOD, ec,
@@ -294,7 +299,8 @@ def test_tcp_streams_match_simulator(pair):
                                 arch="qwen2.5-3b", smoke=True,
                                 host=server.host, port=server.port,
                                 seed=0, io_timeout_s=IO_S,
-                                session_id=f"difftest-{pipeline}")
+                                session_id=f"difftest-{pipeline}",
+                                obs=obs)
             with client:
                 rep = client.run_trace(poisson_trace(trace_cfg))
             assert rep.n_finished == trace_cfg.n_requests
@@ -303,6 +309,16 @@ def test_tcp_streams_match_simulator(pair):
             # measured latency is real wall-clock: present and sane
             assert rep.rpc_round_s["n"] > 0
             assert rep.rpc_round_s["mean"] > 0.0
+            # the shared trace carries round phases on the modeled
+            # clock (sim leg) AND rpc spans on the wall clock (tcp leg)
+            names = span_names_by_clock(obs.tracer.chrome_trace())
+            assert {"draft", "uplink", "verify",
+                    "downlink"} <= names[CLOCK_MODELED], (pipeline,)
+            assert {"draft", "verify_rpc"} <= names[CLOCK_WALL], \
+                (pipeline,)
+            # obs-on clients pull the server's metrics on disconnect
+            assert rep.cloud_stats is not None
+            assert rep.cloud_stats["counters"]["cloud.verify_rpcs"] > 0
 
         # a later cell attaching to the live session with a different
         # config digest must be rejected, not silently diverge
@@ -316,5 +332,59 @@ def test_tcp_streams_match_simulator(pair):
         with pytest.raises(TransportError, match="mismatch"):
             conn.recv_expect(MSG_HELLO_OK)
         conn.close()
+    finally:
+        server.stop()
+
+
+# ======================================================================
+# Decode-error observability: the counter ticks, the structured log
+# names peer + frame type, and the server stays up
+# ======================================================================
+def test_wire_decode_error_counted_logged_and_survivable(pair, caplog):
+    """A corrupt draft payload inside a well-formed VERIFY frame must
+    (a) bump ``cloud.wire_decode_errors``, (b) emit one ERROR-level log
+    naming the peer address and the frame type, (c) surface to the peer
+    as a wire-decode TransportError, and (d) leave the server able to
+    handshake fresh connections and answer STATS."""
+    ecfg = EngineConfig(L_max=L_MAX, bit_budget=4000.0)
+    digest = engine_digest("qwen2.5-3b", True, METHOD, ecfg, seed=0,
+                           n_slots=4, cache_len=48, verdict_batch=False)
+    server = CloudServer().start()
+    try:
+        def hello() -> Conn:
+            c = _dial(server)
+            c.send_json(MSG_HELLO, {"proto": PROTO_VERSION,
+                                    "session": "decode-err", "cell": 0,
+                                    "config": digest})
+            c.recv_expect(MSG_HELLO_OK)
+            return c
+
+        conn = hello()
+        conn.send_json(MSG_ADMIT, tp_mod.admit_body(
+            0, seed=0, wire_codec=None, prompt=range(2, 10)))
+        # an empty draft payload can never decode: the bit reader runs
+        # dry on the very first (count) field in either codec
+        with caplog.at_level(logging.ERROR, logger="repro.serve.net"):
+            conn.send(MSG_VERIFY, tp_mod.pack_verify_body([(0, b"")]))
+            with pytest.raises(TransportError, match="wire decode"):
+                conn.recv_expect(MSG_VERDICTS)
+        conn.close()
+        msgs = [r.getMessage() for r in caplog.records
+                if r.name == "repro.serve.net"
+                and r.levelno == logging.ERROR]
+        assert any("wire decode error from 127.0.0.1:" in m
+                   and "verify frame" in m for m in msgs), msgs
+
+        # server survives: a fresh connection handshakes and a STATS
+        # pull shows exactly one decode error plus the frame counts
+        conn2 = hello()
+        conn2.send_json(MSG_STATS, {})
+        snap = tp_mod.decode_json(conn2.recv_expect(MSG_STATS))
+        assert snap["counters"]["cloud.wire_decode_errors"] == 1
+        assert snap["counters"]["cloud.frames.verify"] == 1
+        assert snap["counters"]["cloud.frames.admit"] == 1
+        assert snap["counters"]["cloud.frames.hello"] == 2
+        conn2.send(MSG_BYE)
+        conn2.close()
     finally:
         server.stop()
